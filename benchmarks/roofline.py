@@ -1,0 +1,77 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For every compiled (arch x shape x mesh) cell: the three terms in seconds,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs (useful-compute fraction)
+and the roofline fraction (useful time / bound time).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def load_artifacts(art_dir: str = ART_DIR) -> List[Dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def table(arts: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for a in arts:
+        if a.get("skipped") or a["mesh"] != mesh or a.get("plan", "base") != "base":
+            continue
+        r = a["roofline"]
+        rows.append({
+            "arch": a["arch"], "shape": a["shape"], "mesh": a["mesh"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "roofline_frac": r["roofline_frac"],
+            "useful_flop_frac": r["useful_flop_frac"],
+            "temp_gb": a.get("temp_size_in_bytes", 0) / 1e9,
+            "args_gb": a.get("argument_size_in_bytes", 0) / 1e9,
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def print_table(rows: List[Dict]) -> None:
+    hdr = (f"{'arch':<18}{'shape':<12}{'compute_s':>11}{'memory_s':>10}"
+           f"{'coll_s':>10}{'bound':>11}{'roofl%':>8}{'useful%':>9}"
+           f"{'temp_GB':>9}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:<18}{r['shape']:<12}{r['compute_s']:>11.3e}"
+              f"{r['memory_s']:>10.3e}{r['collective_s']:>10.3e}"
+              f"{r['bottleneck']:>11}{100*r['roofline_frac']:>7.1f}%"
+              f"{100*r['useful_flop_frac']:>8.1f}%{r['temp_gb']:>9.1f}")
+
+
+def main(out_path: str = None) -> List[Dict]:
+    arts = load_artifacts()
+    if not arts:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    for mesh in ("16x16", "pod2x16x16"):
+        rows = table(arts, mesh)
+        if rows:
+            print(f"\n=== roofline, mesh {mesh} ({len(rows)} cells) ===")
+            print_table(rows)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump({"cells": table(arts, "16x16")
+                       + table(arts, "pod2x16x16")}, f, indent=1)
+    return table(arts, "16x16")
+
+
+if __name__ == "__main__":
+    main()

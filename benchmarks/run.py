@@ -1,0 +1,65 @@
+"""Benchmark driver: one harness per paper table/figure + the mesh-level
+roofline/AMOEBA analyses.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig12 roofline
+
+Writes machine-readable results to experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import figures, mesh_amoeba, roofline  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "bench_results.json")
+
+BENCHES = {
+    "fig12": figures.fig12_performance,
+    "fig13": figures.fig13_stalls,
+    "fig14_16": figures.fig14_16_memory,
+    "fig17_18": figures.fig17_18_noc,
+    "fig19": figures.fig19_dynamics,
+    "fig20": figures.fig20_predictor,
+    "fig21": figures.fig21_dws,
+    "roofline": lambda: {"cells": roofline.main()},
+    "mesh_plan_selection": mesh_amoeba.plan_selection,
+    "serving_regroup": mesh_amoeba.serving_regroup,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(BENCHES)
+    results = {}
+    for name in wanted:
+        fn = BENCHES[name]
+        print(f"\n======== {name} ========")
+        t0 = time.time()
+        results[name] = {"result": fn(), "seconds": round(time.time() - t0, 2)}
+        print(f"[{name}: {results[name]['seconds']}s]")
+
+    # headline validation summary (reproduction vs paper)
+    if "fig12" in results and "fig21" in results:
+        v = results["fig12"]["result"]["validation"]
+        d = results["fig21"]["result"]
+        print("\n======== validation vs paper ========")
+        print(f"SM speedup        {v['SM_speedup']:.2f}  (paper 4.25)")
+        print(f"MUM speedup       {v['MUM_speedup']:.2f}  (paper 2.11)")
+        print(f"geomean           {v['geomean']:.3f} (paper ~1.47)")
+        print(f"regroup/direct    {v['regroup_over_direct']:.3f} (paper ~1.16)")
+        print(f"AMOEBA/DWS        {d['geomean']:.3f} (paper ~1.27)")
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"\nwrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Serving demo: AMOEBA dynamic group splitting vs the fused baseline.
+
+Builds a long-tail request trace on a reduced model and runs the engine
+under all three policies; prints per-policy efficiency, the controller's
+split/fuse timeline (Fig 19 at the mesh level), and verifies the generated
+text is identical across policies.
+
+    PYTHONPATH=src python examples/serve_amoeba.py --requests 24
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--arch", default="qwen3-14b")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.base import AmoebaConfig
+    from repro.models import transformer as T
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_config(args.arch, reduced=True)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+
+    def mk():
+        rng = np.random.default_rng(1)
+        return [Request(i, list(map(int, rng.integers(
+            0, cfg.vocab_size, int(rng.choice([8, 16]))))),
+            int(rng.choice([4, 8, 48], p=[0.4, 0.35, 0.25])))
+            for i in range(args.requests)]
+
+    texts = {}
+    for name, dyn, pol in [("fused_baseline", False, "warp_regroup"),
+                           ("direct_split", True, "direct_split"),
+                           ("warp_regroup", True, "warp_regroup")]:
+        eng = ServeEngine(cfg, params, amoeba=AmoebaConfig(
+            regroup_policy=pol, split_threshold=0.3, fuse_threshold=0.05,
+            min_phase_steps=2), capacity=args.capacity)
+        reqs = mk()
+        eng.submit(reqs)
+        st = eng.run(dynamic=dyn)
+        texts[name] = {r.rid: tuple(r.generated) for r in reqs}
+        print(f"{name:16s} ticks={st.ticks:4d} slots={st.slot_steps:6d} "
+              f"eff={st.efficiency:.3f} splits={st.splits} "
+              f"fuses={st.fuses} completed={st.completed}")
+        if dyn and pol == "warp_regroup":
+            hist = eng.controller.split_state.history
+            timeline = "".join("S" if s else "." for _, s, _ in hist[:80])
+            print(f"  controller timeline: {timeline}")
+    same = texts["fused_baseline"] == texts["warp_regroup"] \
+        == texts["direct_split"]
+    print(f"generated tokens identical across policies: {same}")
+
+
+if __name__ == "__main__":
+    main()

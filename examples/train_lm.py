@@ -1,0 +1,58 @@
+"""End-to-end training driver: a ~100M-parameter LM for a few hundred steps.
+
+The config is a scaled qwen3 family member (12L x 768, ~103M params
+including embeddings) on the synthetic Markov stream; loss drops well below
+the unigram entropy because the stream has learnable bigram structure.
+Checkpoints + fault-tolerant resume are on; pass --steps to shorten.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.ckpt import CheckpointManager
+    from repro.data.pipeline import DataConfig
+    from repro.train import Trainer
+
+    cfg = get_config("qwen3-14b").replace(
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab_size=32_000)
+    print(f"params: {cfg.param_count() / 1e6:.1f}M")
+
+    shape = ShapeConfig("train_lm", args.seq, args.batch, "train")
+    tcfg = TrainConfig(learning_rate=6e-4, warmup_steps=args.steps // 10,
+                       total_steps=args.steps, checkpoint_every=100)
+    trainer = Trainer(cfg, shape, tcfg, data_cfg=DataConfig(seed=0))
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+
+    out = trainer.train(args.steps, ckpt=ckpt, log_every=20)
+    hist = out["history"]
+    if hist:
+        k = max(len(hist) // 10, 1)
+        for m in hist[::k]:
+            print(f"step {m.step:4d}  loss {m.loss:.4f}  "
+                  f"gnorm {m.grad_norm:.2f}  lr {m.lr:.2e}  {m.dt:.2f}s")
+        print(f"final loss {hist[-1].loss:.4f} "
+              f"(uniform would be ln(32000)={np.log(32000):.2f}; "
+              f"bigram floor = ln(8)={np.log(8):.2f})")
+    print(f"straggles={len(out['monitor'].events)} resumes={out['resumes']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Config schema for models, shapes, meshes, and the AMOEBA runtime.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG: ModelConfig``. The registry in ``__init__`` maps the dashed public
+ids (``--arch deepseek-moe-16b``) onto those modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Fine-grained MoE: ``shared`` always-on experts + ``routed`` top-k."""
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    # arctic-style: a dense FFN residual branch that runs in parallel with MoE
+    dense_residual: bool = False
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.001
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-1 block hyperparameters."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None  # default: d_model // 16
+
+    def resolved_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank if self.dt_rank is not None else max(1, d_model // 16)
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RecurrentGemma RG-LRU block hyperparameters."""
+    lru_width: Optional[int] = None   # default: d_model
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None            # default d_model // num_heads
+    activation: str = "swiglu"                # swiglu | relu2 | gelu
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mrope: bool = False                       # qwen2-vl 3-section M-RoPE
+    mrope_sections: Sequence[int] = (16, 24, 24)  # fractions of head_dim//2
+    attn_window: Optional[int] = None         # local (sliding window) attention
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    # block pattern for hybrid archs: tokens 'attn' | 'rglru' | 'ssm';
+    # pattern tiles to num_layers.  None => all 'attn' (or all 'ssm' for ssm family)
+    block_pattern: Optional[Sequence[str]] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    # encoder-decoder (whisper): number of encoder layers; frontend is a stub
+    # that consumes precomputed frame embeddings of shape (B, S, d_model).
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    # vlm: precomputed patch embeddings merged into the token stream.
+    vision_stub: bool = False
+    max_vision_tokens: int = 1024
+    dtype: str = "bfloat16"
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def layer_kinds(self) -> tuple:
+        if self.block_pattern is None:
+            kind = "ssm" if self.family == "ssm" else "attn"
+            return tuple(kind for _ in range(self.num_layers))
+        pat = list(self.block_pattern)
+        return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+
+    @property
+    def uses_rope(self) -> bool:
+        """Whisper-style enc-dec stacks use sinusoidal positions, not RoPE."""
+        return self.encoder_layers == 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(k == "ssm" for k in self.layer_kinds)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True when attention history is bounded (SSM state / local window)."""
+        for k in self.layer_kinds:
+            if k == "attn" and self.attn_window is None:
+                return False
+        return True
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- analytics ---------------------------------------------------------
+    def param_count(self) -> int:
+        """Exact parameter count of the JAX implementation (repro.models)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        q_dim = self.num_heads * hd
+        kv_dim = self.num_kv_heads * hd
+        n = 0
+        # embeddings
+        n += self.vocab_size * d
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        per_layer_attn = d * q_dim + 2 * d * kv_dim + q_dim * d
+        if self.qk_norm:
+            per_layer_attn += 2 * hd
+        if self.activation == "swiglu":
+            per_layer_ffn = 3 * d * self.d_ff
+        else:  # relu2 / gelu: up + down
+            per_layer_ffn = 2 * d * self.d_ff
+        for kind in self.layer_kinds:
+            # pre-norms: ssm blocks are mixer-only (1 norm); others norm1+norm2
+            n += d if kind == "ssm" else 2 * d
+            if kind == "attn":
+                n += per_layer_attn
+            elif kind == "rglru":
+                cfg = self.rglru or RGLRUConfig()
+                w = cfg.lru_width or d
+                # in/out proj (2 branches) + conv + gates (2) + lambda params
+                n += 2 * d * w + w * d + cfg.conv_width * w + 2 * w * w + 2 * w
+            elif kind == "ssm":
+                cfg = self.ssm or SSMConfig()
+                di = cfg.expand * d
+                dtr = cfg.resolved_dt_rank(d)
+                n += d * 2 * di            # in_proj (x and z branches)
+                n += cfg.d_conv * di       # depthwise conv
+                n += di * (dtr + 2 * cfg.d_state)  # x_proj
+                n += dtr * di + di         # dt_proj
+                n += di * cfg.d_state + di  # A_log, D
+                n += di * d                # out_proj
+            if kind != "ssm":
+                if self.moe is not None:
+                    m = self.moe
+                    e_p = 3 * d * m.d_ff_expert if self.activation == "swiglu" \
+                        else 2 * d * m.d_ff_expert
+                    n += (m.num_experts + m.num_shared) * e_p
+                    n += d * m.num_experts  # router
+                    if m.dense_residual:
+                        n += per_layer_ffn
+                elif kind in ("attn", "rglru"):
+                    # griffin-style blocks: every non-ssm block has an MLP
+                    n += per_layer_ffn
+        # encoder stack (whisper): same attn+ffn blocks + cross-attn in decoder
+        if self.encoder_layers:
+            enc = self.encoder_layers * (2 * d + per_layer_attn + per_layer_ffn)
+            n += enc + d  # + encoder final norm
+            if self.cross_attention:
+                n += self.num_layers * (d + per_layer_attn)  # cross-attn + norm
+        n += d  # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top_k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        e_p = (3 if self.activation == "swiglu" else 2) * self.d_model * m.d_ff_expert
+        inactive = (m.num_experts - m.top_k) * e_p * sum(
+            1 for k in self.layer_kinds if k != "ssm")
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned per-arch set)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+LM_SHAPES = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES = {s.name: s for s in LM_SHAPES}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_* decode needs sub-quadratic attention (see DESIGN.md §4)."""
+    if shape.name.startswith("long_") and not model.supports_long_context:
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Hardware model (TPU v5e target; the container only dry-runs on CPU)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HardwareConfig:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bandwidth: float = 819e9        # B/s per chip
+    ici_bandwidth: float = 50e9         # B/s per link
+    hbm_bytes: float = 16 * 2**30       # per chip
+    vmem_bytes: float = 128 * 2**20
+
+
+V5E = HardwareConfig()
+
+
+# ---------------------------------------------------------------------------
+# Runtime / AMOEBA controller configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AmoebaConfig:
+    """Paper §4: controller + split/fuse policy knobs."""
+    enabled: bool = True
+    # fraction of divergent warps (mesh level: divergent requests / tokens)
+    # above which a fused group splits — paper's fixed-ratio threshold.
+    split_threshold: float = 0.25
+    # hysteresis: re-fuse when divergence drops below this.
+    fuse_threshold: float = 0.10
+    # minimum steps between reconfigurations (amortize resharding cost).
+    min_phase_steps: int = 8
+    regroup_policy: str = "warp_regroup"   # "direct_split" | "warp_regroup"
+    predictor_path: Optional[str] = None   # trained coefficient file
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    zero1: bool = True                      # shard optimizer state over data axis
+    remat: str = "full"                     # none | full
+    micro_steps: int = 1                    # gradient-accumulation microbatches
+    grad_compression: bool = False          # int8 DP all-reduce compression
+    checkpoint_every: int = 200
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """A named factorization of the chip grid (an AMOEBA 'plan')."""
+    name: str
+    shape: tuple
+    axes: tuple
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n

@@ -1,0 +1,146 @@
+"""Online reconfiguration controller (paper §4.1, Fig 7 + Fig 10/11).
+
+Two nested loops, exactly the paper's structure lifted to the mesh level:
+
+1. **Per-phase (kernel-analogue) plan selection** — when a new phase starts
+   (a training job, a prefill wave, a decode wave), profile it (dry-run
+   roofline terms or the trained logistic predictor) and pick the mesh plan
+   (fused / base / scale_out).  One-time per phase, amortization-checked.
+
+2. **Dynamic split/fuse inside a phase** — track the divergence signal
+   (decode length spread, MoE expert imbalance).  When it crosses
+   ``split_threshold`` and the regroup policy predicts a win, split the
+   fused group's batch across its halves; re-fuse under ``fuse_threshold``
+   with hysteresis and a ``min_phase_steps`` dwell to stop thrashing.
+
+The controller is deliberately framework-level: it emits *decisions*
+(plan names, split layouts); the launcher/serving engine executes them
+(jit under the chosen mesh, reshard parameters, reorder batches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import AmoebaConfig, HardwareConfig, V5E
+from repro.core import fusion, predictor, regroup
+from repro.core.metrics import StepProfile
+
+
+@dataclass
+class PhaseDecision:
+    plan: str                      # chosen mesh plan name
+    proba: float                   # P(fuse better) from the predictor
+    reason: str
+    profiles: Dict[str, Dict] = field(default_factory=dict)
+
+
+@dataclass
+class SplitState:
+    split: bool = False
+    steps_in_state: int = 0
+    history: List[Tuple[int, bool, float]] = field(default_factory=list)
+
+
+class AmoebaController:
+    """Decision engine shared by the trainer and the serving engine."""
+
+    def __init__(self, cfg: AmoebaConfig = AmoebaConfig(),
+                 model: Optional[predictor.LogisticModel] = None,
+                 hw: HardwareConfig = V5E):
+        self.cfg = cfg
+        self.model = model
+        self.hw = hw
+        self.split_state = SplitState()
+        self.decisions: List[PhaseDecision] = []
+        self._step = 0
+
+    # -- loop 1: per-phase plan selection ---------------------------------
+
+    def choose_plan(self, profiles: Dict[str, StepProfile],
+                    param_bytes_per_chip: float = 0.0,
+                    steps_remaining: float = np.inf) -> PhaseDecision:
+        """Pick the best mesh plan from compiled per-plan profiles.
+
+        ``profiles`` maps plan name -> StepProfile (from the dry-run of the
+        phase's step under each candidate mesh).  When exact profiles exist
+        we compare rooflines directly (the paper's 'oracle' static upper
+        bound); the logistic model covers the online case where only the
+        base profile was measured.
+        """
+        if not self.cfg.enabled:
+            d = PhaseDecision(plan="base", proba=0.5, reason="amoeba off")
+            self.decisions.append(d)
+            return d
+        rts = {name: p.roofline(self.hw) for name, p in profiles.items()}
+        if len(rts) > 1:
+            best = min(rts, key=lambda n: rts[n]["step_s"])
+            base_s = rts.get("base", rts[best])["step_s"]
+            gain = base_s - rts[best]["step_s"]
+            if best != "base" and not fusion.amortized_switch_ok(
+                    gain, param_bytes_per_chip, steps_remaining, self.hw):
+                best, reason = "base", "win does not amortize reshard"
+            else:
+                reason = f"roofline: {best} step {rts[best]['step_s']:.4g}s"
+            proba = 1.0 if best == "fused" else 0.0
+        else:
+            (name, profile), = profiles.items()
+            feats = profile.features()
+            if self.model is not None:
+                proba = float(predictor.predict_proba(self.model, feats))
+                best = "fused" if proba > 0.5 else "scale_out"
+                reason = f"predictor P(fuse)={proba:.3f}"
+            else:
+                # heuristic fallback mirroring §4.1.2: interconnect- or
+                # memory-pressure-bound phases fuse; divergent ones scale out
+                r = profile.roofline(self.hw)
+                fuse = r["bottleneck"] == "collective" or (
+                    r["bottleneck"] == "memory"
+                    and profile.divergence < self.cfg.split_threshold)
+                proba = 0.75 if fuse else 0.25
+                best = "fused" if fuse else "scale_out"
+                reason = f"heuristic: bottleneck={r['bottleneck']}"
+        d = PhaseDecision(plan=best, proba=proba, reason=reason,
+                          profiles=rts)
+        self.decisions.append(d)
+        return d
+
+    # -- loop 2: dynamic split/fuse on divergence --------------------------
+
+    def observe(self, divergence: float,
+                remaining: Optional[Sequence[float]] = None) -> bool:
+        """Feed one step's divergence signal; returns current split state.
+
+        Implements Fig 10/11 with hysteresis + dwell: split when divergence
+        exceeds the threshold *and* the regroup policy predicts a win;
+        re-fuse when it drops below ``fuse_threshold`` (the slow half
+        drained).
+        """
+        st = self.split_state
+        self._step += 1
+        st.steps_in_state += 1
+        if st.steps_in_state < self.cfg.min_phase_steps:
+            st.history.append((self._step, st.split, divergence))
+            return st.split
+
+        if not st.split and divergence > self.cfg.split_threshold:
+            gain = (regroup.regroup_gain(remaining, self.cfg.regroup_policy)
+                    if remaining is not None else divergence)
+            if gain > 0.0:
+                st.split = True
+                st.steps_in_state = 0
+        elif st.split and divergence < self.cfg.fuse_threshold:
+            st.split = False
+            st.steps_in_state = 0
+        st.history.append((self._step, st.split, divergence))
+        return st.split
+
+    def layout(self, indices: Sequence[int],
+               remaining: Sequence[float]) -> Tuple[List[int], List[int]]:
+        """Current batch layout: (fast, slow) under the active policy."""
+        if not self.split_state.split:
+            return list(indices), []
+        return regroup.POLICIES[self.cfg.regroup_policy](indices, remaining)

@@ -1,0 +1,87 @@
+"""Mesh plans: the TPU translation of AMOEBA's SM fuse/split fabric.
+
+A *plan* is a factorization of the same chips into (replica-ish axes x
+model axis).  ``fuse`` merges two neighboring DP groups into one group with
+2x the tensor-parallel width — parameters are stored once per fused group
+(the L1-sharing analogue), the gradient all-reduce has half the
+participants (router-bypass analogue), and per-group batch doubles
+(coalescing analogue).  ``split`` is the inverse.  The pod axis is never
+refactored — fusion happens inside a pod, like the paper fuses *neighboring*
+SMs only.
+
+Reconfiguration is not free on TPU: switching plans reshards every weight.
+``reshard_cost_s`` estimates the all-to-all bytes and the controller
+amortizes it against the predicted per-step win before switching
+(paper §3.3: GPUs hide reconfiguration latency; we must account for it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import HardwareConfig, MeshConfig, V5E
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    """A named (data, model) factorization of the chip grid."""
+    name: str
+    data: int
+    model: int
+    pod: int = 1
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.pod, self.data, self.model) if self.pod > 1 \
+            else (self.data, self.model)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.pod > 1 else ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        return self.pod * self.data * self.model
+
+    def build(self, devices=None) -> Mesh:
+        if devices is None:
+            devices = jax.devices()
+        assert len(devices) >= self.num_devices, (len(devices), self)
+        arr = np.asarray(devices[: self.num_devices]).reshape(self.shape)
+        return Mesh(arr, self.axes)
+
+
+def plan_family(base: MeshPlan) -> Dict[str, MeshPlan]:
+    """The three plans the controller arbitrates between.
+
+    fused:     model x2, data /2   (scale-up: fuse neighboring groups)
+    scale_out: model /2, data x2   (scale-out: split groups)
+    """
+    plans = {"base": base}
+    if base.data % 2 == 0:
+        plans["fused"] = dataclasses.replace(
+            base, name="fused", data=base.data // 2, model=base.model * 2)
+    if base.model % 2 == 0:
+        plans["scale_out"] = dataclasses.replace(
+            base, name="scale_out", data=base.data * 2, model=base.model // 2)
+    return plans
+
+
+def reshard_cost_s(param_bytes_per_chip: float,
+                   hw: HardwareConfig = V5E) -> float:
+    """Crude upper bound for switching plans: every chip sends + receives
+    its parameter shard once over ICI."""
+    return 2.0 * param_bytes_per_chip / hw.ici_bandwidth
+
+
+def amortized_switch_ok(step_gain_s: float, param_bytes_per_chip: float,
+                        steps_remaining: float,
+                        hw: HardwareConfig = V5E) -> bool:
+    """Switch only if the cumulative predicted win repays the reshard."""
+    return step_gain_s * steps_remaining > reshard_cost_s(
+        param_bytes_per_chip, hw)

@@ -1,0 +1,25 @@
+"""Faithful reproduction of the paper's evaluation system.
+
+The paper evaluates AMOEBA in GPGPU-Sim (Table 1 config) on 12 benchmarks,
+purely on throughput.  CUDA traces cannot run here, so the reproduction is a
+cycle-approximate behavioral model of exactly the machine the paper
+describes — scale-out SMs, pairwise fusion, shared L1/coalescer, mesh NoC
+with router bypass, divergence-driven dynamic splitting — driven by
+workload profiles parameterized to the characteristics the paper reports
+per benchmark.  Every figure of §5 has a corresponding harness in
+``benchmarks/``.
+"""
+from repro.core.gpusim.sim import (
+    SCHEMES,
+    SimResult,
+    profile_features,
+    run_benchmark,
+    run_all,
+    FEATURE_NAMES,
+)
+from repro.core.gpusim.workloads import WORKLOADS, Workload, workload_variants
+
+__all__ = [
+    "SCHEMES", "SimResult", "profile_features", "run_benchmark", "run_all",
+    "FEATURE_NAMES", "WORKLOADS", "Workload", "workload_variants",
+]

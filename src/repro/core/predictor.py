@@ -1,0 +1,125 @@
+"""Binary logistic regression scalability predictor (paper §4.1.3).
+
+The paper trains the model offline on simulator data and evaluates it online
+as a single MAC per feature ("since the model is in fact linear, its
+implementation overhead is quite low").  We reproduce exactly that: a JAX
+gradient-descent trainer (fp32, L2-regularized) and an inference path that
+is one dot product + sigmoid.  The same class serves both levels of the
+system:
+
+* **gpusim level** — features are the paper's §4.1.2 metrics (NoC
+  throughput/latency, coalescing rate, L1 miss rates, MSHR rate, inactive
+  thread rate, load/store rates, concurrent CTAs); label = "fused SMs beat
+  split SMs on this kernel".
+* **mesh level** — features are roofline terms of a compiled step (collective
+  bytes/FLOP, HBM bytes/FLOP, per-chip batch, memory pressure, divergence);
+  label = "the TP-heavy (fused) mesh plan beats the DP-heavy (scale-out)
+  plan".
+"""
+from __future__ import annotations
+
+import json
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LogisticModel(NamedTuple):
+    w: jnp.ndarray          # (F,)
+    b: jnp.ndarray          # ()
+    mu: jnp.ndarray         # (F,) feature standardization
+    sigma: jnp.ndarray      # (F,)
+    feature_names: Tuple[str, ...] = ()
+
+    def standardize(self, x: jnp.ndarray) -> jnp.ndarray:
+        return (x - self.mu) / self.sigma
+
+
+def predict_proba(model: LogisticModel, x: jnp.ndarray) -> jnp.ndarray:
+    """P(scale-up / fuse is better). x: (..., F)."""
+    z = model.standardize(x) @ model.w + model.b
+    return jax.nn.sigmoid(z)
+
+
+def predict_fuse(model: LogisticModel, x: jnp.ndarray) -> jnp.ndarray:
+    return predict_proba(model, x) > 0.5
+
+
+def feature_impacts(model: LogisticModel, x: jnp.ndarray) -> jnp.ndarray:
+    """Paper Fig. 20: per-feature impact magnitude = coefficient x value.
+
+    Positive entries push toward scale-up (fuse), negative toward scale-out.
+    """
+    return model.standardize(x) * model.w
+
+
+def train_logistic(X: np.ndarray, y: np.ndarray, *,
+                   feature_names: Sequence[str] = (),
+                   l2: float = 1e-3, lr: float = 0.3, steps: int = 3000,
+                   seed: int = 0) -> Tuple[LogisticModel, dict]:
+    """Offline training (paper: 'a large amount of offline experimental
+    data').  Full-batch gradient descent on the regularized NLL.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    mu = jnp.mean(X, axis=0)
+    sigma = jnp.maximum(jnp.std(X, axis=0), 1e-6)
+    Xs = (X - mu) / sigma
+    F = X.shape[1]
+
+    def nll(params):
+        w, b = params
+        z = Xs @ w + b
+        # numerically stable logistic loss
+        loss = jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+        return loss + l2 * jnp.sum(w ** 2)
+
+    w = jnp.zeros((F,), jnp.float32)
+    b = jnp.zeros((), jnp.float32)
+    grad = jax.jit(jax.grad(nll))
+    val = jax.jit(nll)
+
+    @jax.jit
+    def step(params, _):
+        g = jax.grad(nll)(params)
+        return jax.tree.map(lambda p, gg: p - lr * gg, params, g), None
+
+    params, _ = jax.lax.scan(step, (w, b), None, length=steps)
+    w, b = params
+    model = LogisticModel(w=w, b=b, mu=mu, sigma=sigma,
+                          feature_names=tuple(feature_names))
+    z = Xs @ w + b
+    acc = float(jnp.mean(((z > 0) == (y > 0.5)).astype(jnp.float32)))
+    info = {"train_accuracy": acc, "final_nll": float(val((w, b))),
+            "n": int(X.shape[0])}
+    return model, info
+
+
+# ---------------------------------------------------------------------------
+# (De)serialization — the controller loads trained coefficients at runtime
+# ---------------------------------------------------------------------------
+
+def save_model(model: LogisticModel, path: str) -> None:
+    blob = {
+        "w": np.asarray(model.w).tolist(),
+        "b": float(model.b),
+        "mu": np.asarray(model.mu).tolist(),
+        "sigma": np.asarray(model.sigma).tolist(),
+        "feature_names": list(model.feature_names),
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+
+
+def load_model(path: str) -> LogisticModel:
+    with open(path) as f:
+        blob = json.load(f)
+    return LogisticModel(
+        w=jnp.asarray(blob["w"], jnp.float32),
+        b=jnp.asarray(blob["b"], jnp.float32),
+        mu=jnp.asarray(blob["mu"], jnp.float32),
+        sigma=jnp.asarray(blob["sigma"], jnp.float32),
+        feature_names=tuple(blob["feature_names"]),
+    )

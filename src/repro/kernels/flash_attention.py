@@ -1,0 +1,139 @@
+"""Blockwise (flash) attention Pallas TPU kernel.
+
+AMOEBA's fused SM shares one double-width coalescing unit between two former
+SMs; the TPU analogue of that memory-system discipline is a tiled attention
+kernel whose working set lives in VMEM: each (q-block, kv-block) tile is
+loaded once from HBM, scored on the MXU, and folded into an online-softmax
+accumulator — K/V bytes are read exactly once per q-block regardless of the
+sequence length.
+
+Layout: the kernel operates on head-major (B, H, S, hd) tensors so the
+lane dimension is hd (128-aligned for every assigned arch).  GQA maps the
+kv-head for query head ``h`` as ``h // (H // KV)`` inside the k/v BlockSpec
+index maps — no materialized head broadcast.
+
+Grid: (B, H, nq, nk) with the kv-block dimension innermost; the running
+(m, l, acc) statistics persist in VMEM scratch across the sequential nk
+steps (TPU grid semantics), and the output tile is written once on the
+last kv step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 bq: int, bk: int, nk: int, s_q: int, s_kv: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal/window block skip: the whole tile is masked out — do no compute.
+    q_lo = iq * bq
+    k_lo = ik * bk
+    live = k_lo < s_kv
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + bq - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < s_kv
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = jnp.max(m_scr[...], axis=1)                # (bq,)
+        l_prev = jnp.max(l_scr[...], axis=1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        corr = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])                     # (bq, bk)
+        l_cur = l_prev * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jax.lax.broadcast_in_dim(m_cur, m_scr.shape, (0,))
+        l_scr[...] = jax.lax.broadcast_in_dim(l_cur, l_scr.shape, (0,))
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.max(l_scr[...], axis=1)
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_hm(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                       causal: bool = True, window: Optional[int] = None,
+                       bq: int = 256, bk: int = 256,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Head-major flash attention.
+
+    q: (B, H, Sq, hd);  k, v: (B, KV, Skv, hd) with H % KV == 0.
+    Returns (B, H, Sq, hd) in q.dtype.
+    """
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    nq = -(-Sq // bq)
+    nk = -(-Skv // bk)
+    pq, pk = nq * bq - Sq, nk * bk - Skv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, s_q=Sq, s_kv=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # running max
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # running sum
+            pltpu.VMEM((bq, hd), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

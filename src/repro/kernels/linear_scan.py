@@ -1,0 +1,141 @@
+"""Linear-recurrence Pallas TPU kernels: RG-LRU gate scan and the Mamba-1
+selective scan (fused with the C-contraction).
+
+The recurrence ``h_t = a_t * h_{t-1} + b_t`` is sequential in t, so the
+kernel keeps ``h`` resident in VMEM scratch and streams (a, b) tiles from
+HBM: grid (B, n_width, n_seq) with the sequence dimension innermost —
+exactly one HBM read per input element and one write per output element,
+which is the roofline floor for this memory-bound op.
+
+For the selective SSM the (D, N) state history is *never* written to HBM:
+``y_t = <h_t, c_t>`` is contracted in-register, the TPU mirror of what the
+CUDA selective-scan kernel does in shared memory.  Layout note: state tiles
+are (N, bd) so the model dimension rides the 128-wide lane axis; N (8..16)
+sits on sublanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan: a, b (B, S, W) -> h (B, S, W)
+# ---------------------------------------------------------------------------
+
+def _rglru_kernel(a_ref, b_ref, h_ref, h_scr, *, bs: int):
+    is_ = pl.program_id(2)
+
+    @pl.when(is_ == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def body(t, h):
+        at = a_ref[0, pl.ds(t, 1), :]          # (1, bw)
+        bt = b_ref[0, pl.ds(t, 1), :]
+        h = at * h + bt
+        h_ref[0, pl.ds(t, 1), :] = h
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, bs, body, h_scr[...])
+
+
+def rglru_scan_pallas(a: jnp.ndarray, b: jnp.ndarray, *, bs: int = 256,
+                      bw: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """a, b: (B, S, W) float32 -> h: (B, S, W) float32."""
+    B, S, W = a.shape
+    bs = min(bs, S)
+    bw = min(bw, W)
+    ns = -(-S // bs)
+    nw = -(-W // bw)
+    ps, pw = ns * bs - S, nw * bw - W
+    if ps or pw:
+        # a=1, b=0 are the identity of the recurrence
+        a = jnp.pad(a, ((0, 0), (0, ps), (0, pw)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, ps), (0, pw)))
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, bs=bs),
+        grid=(B, nw, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda b_, iw, is_: (b_, is_, iw)),
+            pl.BlockSpec((1, bs, bw), lambda b_, iw, is_: (b_, is_, iw)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bw), lambda b_, iw, is_: (b_, is_, iw)),
+        out_shape=jax.ShapeDtypeStruct((B, ns * bs, nw * bw), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:, :S, :W]
+
+
+# ---------------------------------------------------------------------------
+# Selective SSM scan + contraction:
+#   a, b (B, S, N, D), c (B, S, N)  ->  y (B, S, D), h_last (B, N, D)
+# ---------------------------------------------------------------------------
+
+def _ssm_kernel(a_ref, b_ref, c_ref, y_ref, h_last_ref, h_scr, *,
+                bs: int, ns: int):
+    is_ = pl.program_id(2)
+
+    @pl.when(is_ == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def body(t, h):
+        at = a_ref[0, pl.ds(t, 1)][0]          # (N, bd)
+        bt = b_ref[0, pl.ds(t, 1)][0]
+        ct = c_ref[0, pl.ds(t, 1)][0]          # (N,)
+        h = at * h + bt                        # (N, bd)
+        y = jnp.sum(h * ct[:, None], axis=0)   # (bd,)
+        y_ref[0, pl.ds(t, 1), :] = y[None]
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, bs, body, h_scr[...])
+
+    @pl.when(is_ == ns - 1)
+    def _finish():
+        h_last_ref[0] = h_scr[...]
+
+
+def ssm_scan_pallas(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, *,
+                    bs: int = 128, bd: int = 512, interpret: bool = False):
+    """a, b: (B, S, N, D); c: (B, S, N) — all float32.
+
+    Returns (y (B, S, D), h_last (B, N, D)).
+    """
+    B, S, N, D = a.shape
+    bs = min(bs, S)
+    bd = min(bd, D)
+    ns = -(-S // bs)
+    nd = -(-D // bd)
+    ps, pd = ns * bs - S, nd * bd - D
+    if ps or pd:
+        a = jnp.pad(a, ((0, 0), (0, ps), (0, 0), (0, pd)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, ps), (0, 0), (0, pd)))
+        c = jnp.pad(c, ((0, 0), (0, ps), (0, 0)))
+
+    y, h_last = pl.pallas_call(
+        functools.partial(_ssm_kernel, bs=bs, ns=ns),
+        grid=(B, nd, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, N, bd), lambda b_, id_, is_: (b_, is_, 0, id_)),
+            pl.BlockSpec((1, bs, N, bd), lambda b_, id_, is_: (b_, is_, 0, id_)),
+            pl.BlockSpec((1, bs, N), lambda b_, id_, is_: (b_, is_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b_, id_, is_: (b_, is_, id_)),
+            pl.BlockSpec((1, N, bd), lambda b_, id_, is_: (b_, 0, id_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, ns * bs, nd * bd), jnp.float32),
+            jax.ShapeDtypeStruct((B, N, nd * bd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, bd), jnp.float32)],
+        interpret=interpret,
+    )(a, b, c)
+    return y[:, :S, :D], h_last[:, :, :D]

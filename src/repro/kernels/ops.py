@@ -1,0 +1,77 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On a CPU runtime (this container) the kernels run in ``interpret=True``
+mode — the kernel body executes in Python/XLA exactly as written, which is
+how they are validated against the ``ref.py`` oracles.  On a TPU runtime
+the same calls lower to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import linear_scan as _ls
+from repro.kernels import quantize as _qz
+from repro.kernels import rmsnorm as _rn
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 256, bk: int = 256) -> jnp.ndarray:
+    """q: (B, S, H, hd); k, v: (B, Skv, KV, hd) -> (B, S, H, hd)."""
+    qhm = q.transpose(0, 2, 1, 3)
+    khm = k.transpose(0, 2, 1, 3)
+    vhm = v.transpose(0, 2, 1, 3)
+    out = _fa.flash_attention_hm(qhm, khm, vhm, causal=causal, window=window,
+                                 bq=bq, bk=bk, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bw"))
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, *, bs: int = 256,
+               bw: int = 512) -> jnp.ndarray:
+    """a, b: (B, S, W) fp32 -> h (B, S, W) fp32."""
+    return _ls.rglru_scan_pallas(a, b, bs=bs, bw=bw, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bd"))
+def ssm_scan(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, *,
+             bs: int = 128, bd: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Model-layout selective scan.
+
+    a, b: (B, S, D, N); c: (B, S, N) -> (y (B, S, D), h_last (B, D, N)).
+    The kernel wants the lane axis on D, so transpose to (B, S, N, D).
+    """
+    at = a.transpose(0, 1, 3, 2)
+    bt = b.transpose(0, 1, 3, 2)
+    y, h_last = _ls.ssm_scan_pallas(at, bt, c, bs=bs, bd=bd,
+                                    interpret=_interpret())
+    return y, h_last.transpose(0, 2, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bt"))
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+            bt: int = 256) -> jnp.ndarray:
+    """x: (..., D); scale: (D,)."""
+    shape = x.shape
+    out = _rn.rmsnorm_pallas(x.reshape(-1, shape[-1]), scale, eps=eps, bt=bt,
+                             interpret=_interpret())
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bt",))
+def quantize_int8(x: jnp.ndarray, *, bt: int = 256):
+    """x: (T, D) -> (q int8, scale f32 (T, 1))."""
+    return _qz.quantize_int8_pallas(x, bt=bt, interpret=_interpret())
+
+
+dequantize_int8 = _qz.dequantize_int8

@@ -1,0 +1,56 @@
+"""Row-wise symmetric int8 quantization Pallas kernel.
+
+Used by the gradient-compression path of the DP all-reduce: gradients are
+quantized to int8 + one fp32 scale per row before crossing the ICI, cutting
+collective bytes 4x (the paper's NoC term is the analogous bottleneck its
+fusion relieves; compression attacks the same roofline term from the
+software side).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                     # (bt, D)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)     # (bt, 1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quantize_int8_pallas(x: jnp.ndarray, *, bt: int = 256,
+                         interpret: bool = False):
+    """x: (T, D) -> (q int8 (T, D), scale f32 (T, 1))."""
+    T, D = x.shape
+    bt = min(bt, T)
+    nt = -(-T // bt)
+    pt = nt * bt - T
+    if pt:
+        x = jnp.pad(x, ((0, pt), (0, 0)))
+
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((bt, D), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, D), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nt * bt, D), jnp.int8),
+            jax.ShapeDtypeStruct((nt * bt, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:T], s[:T]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

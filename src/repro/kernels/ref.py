@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+Deliberately naive: full-materialization attention, step-by-step scans.
+Numerics are fp32 throughout.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, S, H, hd); k, v: (B, Skv, KV, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, hd) / (hd ** 0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kf)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, vf)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a, b: (B, S, W) -> h (B, S, W); h_t = a_t h_{t-1} + b_t, h_{-1} = 0."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.zeros_like(a[:, 0]),
+                         (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)
+
+
+def ssm_scan(a: jnp.ndarray, b: jnp.ndarray,
+             c: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a, b: (B, S, D, N); c: (B, S, N) -> (y (B, S, D), h_last (B, D, N))."""
+    def step(h, abc):
+        at, bt, ct = abc
+        h = at * h + bt                       # (B, D, N)
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros_like(a[:, 0])
+    h_last, ys = jax.lax.scan(
+        step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1), c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h_last
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray,
+            eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the device
+# count at first initialization, and the dry-run needs 512 placeholder host
+# devices to build the production meshes.  Only this entry point sets the
+# flag — tests/benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real program of the phase — the full
+train_step (loss + grad + AdamW) for train shapes, ``prefill`` for
+prefill shapes, one-token ``decode_step`` against the full-length KV/state
+cache for decode shapes — with parameter/optimizer/cache shardings resolved
+against the 16x16 single-pod mesh or the 2x16x16 multi-pod mesh, then:
+
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(*specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())     # proves the layout fits HBM
+    print(compiled.cost_analysis())       # FLOPs/bytes for the roofline
+
+Inputs are ShapeDtypeStructs (repro.data.make_batch_specs) — nothing is
+allocated.  Collective payload bytes are parsed from the post-SPMD HLO and
+the roofline terms (EXPERIMENTS.md) derive from the JSON artifact this
+writes per cell.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k [--multi-pod] [--plan fused] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, LM_SHAPES, SHAPES, get_config,
+                           shape_applicable)
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core.fusion import MeshPlan
+from repro.core.metrics import profile_from_compiled
+from repro.data.pipeline import DataConfig, make_batch_specs
+from repro.launch import mesh as meshlib
+from repro.models import transformer as T
+from repro.parallel import resolve, shardctx
+from repro.train.trainer import Trainer
+
+ENC_FRAMES = 1500
+
+
+def nonembed_params(cfg: ModelConfig, active: bool = True) -> int:
+    n = cfg.active_param_count() if active else cfg.param_count()
+    emb = cfg.vocab_size * cfg.d_model
+    if not cfg.tie_embeddings:
+        emb *= 2
+    return n - emb
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful FLOPs of the whole step: 6*N*D train, 2*N*D forward."""
+    n = nonembed_params(cfg, active=True)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: 1 token/seq
+
+
+def _rt(cfg: ModelConfig, shape: ShapeConfig,
+        seq_shard: bool = True) -> T.Runtime:
+    """Production runtime: SP on for full-sequence phases (see §Perf —
+    sequence sharding is what fits the 340B residual stream in HBM)."""
+    return T.Runtime(production=True, remat=True, use_kernels=False,
+                     q_block=512, kv_block=1024, loss_chunk=512,
+                     seq_shard=seq_shard and shape.kind != "decode")
+
+
+def _micro_steps(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Grad-accumulation heuristic: cap the saved-residual footprint.
+
+    est = L x B_loc x (S / TP) x D bytes; keep it under ~4 GB/device.
+    """
+    if shape.kind != "train":
+        return 1
+    if cfg.moe is not None:
+        # the expert shard_map under a grad-accum scan trips the SPMD
+        # partitioner (dynamic-slice of the FSDP gather); MoE residual
+        # streams are narrow enough to train un-accumulated
+        return 1
+    if cfg.param_count() <= 5e10:
+        # fp32 m/v states + grad-accum scan also trips the partitioner
+        # (same dynamic-slice verifier failure); sub-50B residual streams
+        # fit without accumulation anyway
+        return 1
+    b_loc = max(shape.global_batch // 16, 1)
+    # budget for the saved residual stack (XLA may hoist an fp32 copy)
+    est = cfg.num_layers * b_loc * (shape.seq_len / 16) * cfg.d_model * 4
+    k = 1
+    while est / k > 4e9 and k < 16 \
+            and (shape.global_batch // 16) % (2 * k) == 0:
+        k *= 2
+    return k
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, plan_name: str):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs))."""
+    rt = _rt(cfg, shape)
+    B = shape.global_batch
+    batch_specs = make_batch_specs(cfg, shape)
+
+    def batch_shardings(specs):
+        return {k: NamedSharding(mesh, resolve.resolve_spec(
+            P("batch"), mesh, v.shape[0])) for k, v in specs.items()}
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(remat="full", micro_steps=_micro_steps(cfg, shape))
+        trainer = Trainer(cfg, shape, tcfg, rt=rt, mesh=mesh,
+                          state_dtype="bfloat16"
+                          if cfg.param_count() > 5e10 else None)
+        sp = trainer.state_pspecs()
+        state_shapes = trainer._restore_template()
+        state_sh = resolve.resolve_tree_for(state_shapes, sp, mesh)
+        jitted = jax.jit(trainer.make_step_body(),
+                         in_shardings=(state_sh, batch_shardings(batch_specs)),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        return jitted, (state_shapes, batch_specs)
+
+    # serving paths need the parameter tree + decode state shapes
+    params_shapes, pspecs = T.model_pspecs(cfg)
+    params_sh = resolve.resolve_tree_for(params_shapes, pspecs, mesh)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return T.prefill(params, batch, cfg, rt)
+
+        jitted = jax.jit(prefill_fn,
+                         in_shardings=(params_sh,
+                                       batch_shardings(batch_specs)),
+                         out_shardings=None)
+        return jitted, (params_shapes, batch_specs)
+
+    # decode: one new token against a seq_len-deep cache
+    enc_len = ENC_FRAMES if cfg.encoder_layers else 0
+    state_shapes = jax.eval_shape(
+        lambda: T.init_decode_state(cfg, B, shape.seq_len, enc_len))
+    state_sp = T.decode_state_pspecs(cfg)
+    state_sh = resolve.resolve_tree_for(state_shapes, state_sp, mesh,
+                                        batch_size=B)
+    tok_spec = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, resolve.resolve_spec(P("batch"), mesh, B))
+
+    def decode_fn(params, state, tokens):
+        return T.decode_step(params, state, tokens, cfg, rt)
+
+    jitted = jax.jit(decode_fn,
+                     in_shardings=(params_sh, state_sh, tok_sh),
+                     out_shardings=(None, state_sh),
+                     donate_argnums=(1,))
+    return jitted, (params_shapes, state_shapes, tok_spec)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             plan_name: str = "base", out_dir: str = "experiments/dryrun",
+             verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "quadratic attention at 500k (DESIGN.md §4)"}
+    if multi_pod:
+        mesh = meshlib.make_production_mesh(multi_pod=True)
+        mesh_name = "pod2x16x16"
+    elif plan_name != "base":
+        plan = meshlib.single_pod_plan(plan_name)
+        mesh = meshlib.make_plan_mesh(plan)
+        mesh_name = f"{plan.data}x{plan.model}_{plan_name}"
+    else:
+        mesh = meshlib.make_production_mesh(multi_pod=False)
+        mesh_name = "16x16"
+
+    t0 = time.time()
+    with shardctx.use_mesh(mesh):
+        jitted, args = build_cell(cfg, shape, mesh, plan_name)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = None
+        try:
+            mem = compiled.memory_analysis()
+            if verbose:
+                print(mem)
+        except Exception as e:                       # CPU backend quirk
+            print(f"memory_analysis unavailable: {e}")
+        cost = compiled.cost_analysis()
+        if verbose:
+            print({k: cost[k] for k in sorted(cost)[:8]}
+                  if hasattr(cost, "keys") else cost)
+
+        chips = mesh.devices.size
+        prof = profile_from_compiled(
+            f"{arch}/{shape_name}/{mesh_name}", lowered, compiled,
+            chips=chips, model_flops=model_flops(cfg, shape),
+            per_chip_batch=shape.global_batch * shape.seq_len / chips
+            if shape.kind != "decode" else shape.global_batch / chips)
+
+    art = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "plan": plan_name, "kind": shape.kind, "chips": chips,
+        "skipped": False,
+        "flops_per_device": prof.flops,
+        "hbm_bytes_per_device": prof.hbm_bytes,
+        "collective_bytes_per_device": prof.coll_bytes,
+        "collective_breakdown": prof.coll_breakdown,
+        "model_flops": prof.model_flops,
+        "per_chip_batch": prof.per_chip_batch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "roofline": prof.roofline(),
+        "raw": prof.raw,
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                art[attr] = int(v)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if plan_name == "base" else f"__{plan_name}"
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    if verbose:
+        r = art["roofline"]
+        print(f"[dryrun] {arch} {shape_name} {mesh_name}: "
+              f"compute={r['compute_s']:.4g}s memory={r['memory_s']:.4g}s "
+              f"coll={r['collective_s']:.4g}s -> {r['bottleneck']} "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    return art
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in LM_SHAPES] + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--plan", default="base",
+                    choices=["base", "fused", "scale_out"])
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell on the chosen mesh")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in LM_SHAPES:
+                cells.append((arch, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        try:
+            run_cell(arch, shape_name, multi_pod=args.multi_pod,
+                     plan_name=args.plan, out_dir=args.out)
+        except Exception:
+            traceback.print_exc()
+            failures.append((arch, shape_name))
+    if failures:
+        print(f"FAILED cells: {failures}")
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

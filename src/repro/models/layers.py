@@ -1,0 +1,191 @@
+"""Shared layer primitives: norms, MLPs, RoPE / M-RoPE, embeddings.
+
+All parameters are plain pytrees (nested dicts of ``jnp.ndarray``).  Every
+``init_*`` returns ``(params, pspecs)`` where ``pspecs`` mirrors the param
+tree with ``jax.sharding.PartitionSpec`` leaves — the distribution layer
+turns those into ``NamedSharding`` for the production mesh.
+
+Sharding vocabulary (logical axes):
+  * ``"model"``  — tensor-parallel axis (heads / d_ff / experts / vocab-out)
+  * ``"data"``   — FSDP axis: weights additionally sharded on a non-model
+    dimension and all-gathered per layer inside the scan (ZeRO-3 semantics
+    under GSPMD).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def truncated_normal(key, shape, stddev, dtype):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype) -> Tuple[dict, dict]:
+    return {"scale": jnp.ones((dim,), dtype)}, {"scale": P(None)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_headwise(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6):
+    """QK-norm: normalize the trailing head_dim of (..., H, hd)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype):
+    """Gated (swiglu) or 2-matrix (relu2 / gelu) MLP."""
+    std_in = 1.0 / math.sqrt(d_model)
+    std_out = 1.0 / math.sqrt(d_ff)
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        params = {
+            "wi_gate": truncated_normal(ks[0], (d_model, d_ff), std_in, dtype),
+            "wi_up": truncated_normal(ks[1], (d_model, d_ff), std_in, dtype),
+            "wo": truncated_normal(ks[2], (d_ff, d_model), std_out, dtype),
+        }
+        pspecs = {
+            "wi_gate": P("data", "model"),
+            "wi_up": P("data", "model"),
+            "wo": P("model", "data"),
+        }
+    else:
+        params = {
+            "wi_up": truncated_normal(ks[1], (d_model, d_ff), std_in, dtype),
+            "wo": truncated_normal(ks[2], (d_ff, d_model), std_out, dtype),
+        }
+        pspecs = {
+            "wi_up": P("data", "model"),
+            "wo": P("model", "data"),
+        }
+    return params, pspecs
+
+
+def mlp(params: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    up = x @ params["wi_up"]
+    if activation == "swiglu":
+        gate = x @ params["wi_gate"]
+        h = jax.nn.silu(gate) * up
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    elif activation == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)               # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Sequence[int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, hd); positions: (B, 3, S) — (temporal, height, width) index
+    per token.  The hd/2 frequency bins are partitioned into ``sections``
+    (e.g. 16+24+24 = 64); each partition takes its angle from the matching
+    position component.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(x.shape[-1], theta)                 # (half,)
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs   # (B, 3, S, half)
+    parts = []
+    start = 0
+    for comp, sec in enumerate(sections):
+        parts.append(ang_all[:, comp, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                        # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal position embedding, (S, D)."""
+    half = d_model // 2
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype, tie: bool):
+    ks = jax.random.split(key, 2)
+    params = {"table": truncated_normal(ks[0], (vocab, d_model), 1.0, dtype)}
+    pspecs = {"table": P("data", "model")}
+    if not tie:
+        params["out"] = truncated_normal(
+            ks[1], (d_model, vocab), 1.0 / math.sqrt(d_model), dtype)
+        pspecs["out"] = P("data", "model")
+    return params, pspecs
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jnp.ndarray, tie: bool) -> jnp.ndarray:
+    if tie:
+        return x @ params["table"].T.astype(x.dtype)
+    return x @ params["out"]
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def next_token_loss(logits: jnp.ndarray, tokens: jnp.ndarray,
+                    mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Causal LM cross-entropy, fp32 accumulation over a 'model'-sharded vocab."""
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = logz - picked
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

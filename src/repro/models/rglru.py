@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  r_t = sigmoid(x W_a + b_a),
+i_t = sigmoid(x W_x).
+
+The block is: in-proj (x branch + gate branch) -> causal conv on x branch ->
+RG-LRU -> gate -> out-proj.  ``lru_width`` is sharded over 'model' (all the
+recurrence math is elementwise over width).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, scan_utils
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+class RGLRUState(NamedTuple):
+    conv: jnp.ndarray   # (B, K-1, W)
+    h: jnp.ndarray      # (B, W) fp32
+
+
+def init_rglru(key, cfg: ModelConfig):
+    r = cfg.rglru
+    d = cfg.d_model
+    w = r.lru_width or d
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    std_d = 1.0 / math.sqrt(d)
+    std_w = 1.0 / math.sqrt(w)
+    # Lambda init so that a ~ uniform(0.9, 0.999) at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    params = {
+        "in_x": layers.truncated_normal(ks[0], (d, w), std_d, dtype),
+        "in_gate": layers.truncated_normal(ks[1], (d, w), std_d, dtype),
+        "conv_w": layers.truncated_normal(ks[2], (r.conv_width, w), 0.1, dtype),
+        "wa": layers.truncated_normal(ks[3], (w, w), std_w, dtype),
+        "wx": layers.truncated_normal(ks[4], (w, w), std_w, dtype),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out": layers.truncated_normal(ks[0], (w, d), std_w, dtype),
+    }
+    pspecs = {
+        "in_x": P("data", "model"),
+        "in_gate": P("data", "model"),
+        "conv_w": P(None, "model"),
+        "wa": P("data", "model"),
+        "wx": P("data", "model"),
+        "ba": P("model"),
+        "lam": P("model"),
+        "out": P("model", "data"),
+    }
+    return params, pspecs
+
+
+def _gates(params, xc):
+    """xc: (..., W) conv output -> (a, gated_input) in fp32."""
+    r = jax.nn.sigmoid((xc @ params["wa"]).astype(jnp.float32) + params["ba"])
+    i = jax.nn.sigmoid((xc @ params["wx"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = beta * i * xc.astype(jnp.float32)
+    return a, b
+
+
+def rglru_forward(params, x: jnp.ndarray, cfg: ModelConfig,
+                  use_kernel: bool = False, return_state: bool = False):
+    """x: (B,S,D) -> (B,S,D) (optionally also the final RGLRUState)."""
+    xb = x @ params["in_x"]
+    gate = x @ params["in_gate"]
+    xc = scan_utils.causal_conv1d(xb, params["conv_w"])
+    a, b = _gates(params, xc)
+    h0 = jnp.zeros((x.shape[0], a.shape[-1]), jnp.float32)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        h = kernel_ops.rglru_scan(a, b)
+        h_last = h[:, -1]
+    else:
+        h, h_last = scan_utils.linear_scan(a, b, h0)
+    y = h.astype(x.dtype) * jax.nn.gelu(gate)
+    out = y @ params["out"]
+    if not return_state:
+        return out
+    conv_state = scan_utils.conv_tail(xb, (cfg.rglru.conv_width
+                                           if cfg.rglru else 4))
+    return out, RGLRUState(conv=conv_state, h=h_last)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    return RGLRUState(
+        conv=jnp.zeros((batch, r.conv_width - 1, w), jnp.dtype(cfg.dtype)),
+        h=jnp.zeros((batch, w), jnp.float32),
+    )
+
+
+def rglru_state_pspec() -> RGLRUState:
+    return RGLRUState(conv=P("batch", None, "model"),
+                      h=P("batch", "model"))
+
+
+def rglru_step(params, state: RGLRUState, x_new: jnp.ndarray,
+               cfg: ModelConfig) -> Tuple[jnp.ndarray, RGLRUState]:
+    """Decode step.  x_new: (B,1,D) -> (B,1,D)."""
+    xb = x_new[:, 0] @ params["in_x"]
+    gate = x_new[:, 0] @ params["in_gate"]
+    xc, conv_state = scan_utils.causal_conv1d_step(
+        xb, state.conv, params["conv_w"])
+    a, b = _gates(params, xc)
+    h = scan_utils.linear_scan_step(a, b, state.h)
+    y = h.astype(x_new.dtype) * jax.nn.gelu(gate)
+    return (y @ params["out"])[:, None], RGLRUState(conv=conv_state, h=h)

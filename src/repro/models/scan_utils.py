@@ -1,0 +1,120 @@
+"""Linear-recurrence scan shared by the SSM and RG-LRU blocks.
+
+``h_t = a_t * h_{t-1} + b_t`` evaluated as a chunked associative scan:
+an outer ``lax.scan`` carries the state across fixed-size chunks (bounding
+peak memory to O(chunk)) while ``lax.associative_scan`` parallelizes inside
+each chunk.  This is the pure-JAX oracle; ``repro.kernels`` carries the
+Pallas TPU version that keeps the running state in VMEM.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a2 * a1, a2 * b1 + b2
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Evaluate h_t = a_t h_{t-1} + b_t along axis 1.
+
+    a, b: (B, S, ...); h0: (B, ...).  Returns (h_all (B,S,...), h_last).
+    """
+    B, S = a.shape[0], a.shape[1]
+    c = min(chunk, S)
+    n = -(-S // c)
+    pad = n * c - S
+    if pad:
+        # identity elements: a=1, b=0 leave the state untouched
+        a = jnp.concatenate([a, jnp.ones((B, pad) + a.shape[2:], a.dtype)], 1)
+        b = jnp.concatenate([b, jnp.zeros((B, pad) + b.shape[2:], b.dtype)], 1)
+    ar = a.reshape((B, n, c) + a.shape[2:]).swapaxes(0, 1)
+    br = b.reshape((B, n, c) + b.shape[2:]).swapaxes(0, 1)
+
+    def step(h, inp):
+        ac, bc = inp                                  # (B, c, ...)
+        bc = bc.at[:, 0].add(ac[:, 0] * h)            # fold carry into chunk
+        _, hs = jax.lax.associative_scan(_combine, (ac, bc), axis=1)
+        return hs[:, -1], hs
+
+    h_last, chunks = jax.lax.scan(step, h0, (ar, br))
+    out = chunks.swapaxes(0, 1).reshape((B, n * c) + a.shape[2:])
+    return out[:, :S], h_last
+
+
+def linear_scan_contract(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+                         h0: jnp.ndarray, chunk: int = 64
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused scan + state contraction for the selective SSM.
+
+    h_t = a_t * h_{t-1} + b_t  with  a, b: (B, S, D, N);  then
+    y_t = sum_n h_t[.., n] * c_t[.., n]  with  c: (B, S, N).
+
+    Returns (y (B, S, D), h_last (B, D, N)).  The (B, S, D, N) state history
+    is only ever materialized one chunk at a time — this is the pure-JAX
+    mirror of what the Pallas kernel does in VMEM.
+    """
+    B, S, D, N = a.shape
+    ck = min(chunk, S)
+    n = -(-S // ck)
+    pad = n * ck - S
+    if pad:
+        a = jnp.concatenate([a, jnp.ones((B, pad, D, N), a.dtype)], 1)
+        b = jnp.concatenate([b, jnp.zeros((B, pad, D, N), b.dtype)], 1)
+        c = jnp.concatenate([c, jnp.zeros((B, pad, N), c.dtype)], 1)
+    ar = a.reshape(B, n, ck, D, N).swapaxes(0, 1)
+    br = b.reshape(B, n, ck, D, N).swapaxes(0, 1)
+    cr = c.reshape(B, n, ck, N).swapaxes(0, 1)
+
+    def step(h, inp):
+        ac, bc, cc = inp                              # (B, ck, D, N), (B, ck, N)
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        _, hs = jax.lax.associative_scan(_combine, (ac, bc), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, cc)
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(step, h0, (ar, br, cr))
+    y = ys.swapaxes(0, 1).reshape(B, n * ck, D)
+    return y[:, :S], h_last
+
+
+def linear_scan_step(a: jnp.ndarray, b: jnp.ndarray,
+                     h: jnp.ndarray) -> jnp.ndarray:
+    """Single decode step of the same recurrence."""
+    return a * h + b
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq.  x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is 4 — unrolled adds fuse into one kernel
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+def causal_conv1d_step(x_new: jnp.ndarray, conv_state: jnp.ndarray,
+                       w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode-step conv.  x_new: (B,C); conv_state: (B,K-1,C); w: (K,C)."""
+    window = jnp.concatenate([conv_state, x_new[:, None]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    return out, window[:, 1:]
+
+
+def conv_tail(x: jnp.ndarray, kernel_width: int) -> jnp.ndarray:
+    """Last K-1 steps of the conv input (front-padded when S < K-1).
+
+    x: (B, S, C) -> (B, K-1, C): the decode-time conv state after a prefill.
+    """
+    K1 = kernel_width - 1
+    B, S, C = x.shape
+    if S >= K1:
+        return x[:, S - K1:]
+    return jnp.pad(x, ((0, 0), (K1 - S, 0), (0, 0)))

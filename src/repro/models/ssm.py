@@ -1,0 +1,143 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b).
+
+Tensor-parallel layout: ``d_inner`` is sharded over 'model' — the conv,
+gating, scan and C-projection are all elementwise (or contract over
+``d_state``/``dt_rank`` only), so the whole block runs collective-free until
+``out_proj`` (one psum), mirroring Megatron MLP sharding.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, scan_utils
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv-1, d_inner)
+    h: jnp.ndarray      # (B, d_inner, d_state)
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dtr = s.resolved_dt_rank(d)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    std = 1.0 / math.sqrt(d)
+    params = {
+        "in_proj": layers.truncated_normal(ks[0], (d, 2 * di), std, dtype),
+        "conv_w": layers.truncated_normal(ks[1], (s.d_conv, di), 0.1, dtype),
+        "x_proj": layers.truncated_normal(
+            ks[2], (di, dtr + 2 * s.d_state), 1.0 / math.sqrt(di), dtype),
+        "dt_proj": layers.truncated_normal(ks[3], (dtr, di),
+                                           1.0 / math.sqrt(dtr), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[4], (di,), jnp.float32,
+                math.log(1e-3), math.log(1e-1))))).astype(dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, s.d_state))
+        ).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.truncated_normal(ks[5], (di, d),
+                                            1.0 / math.sqrt(di), dtype),
+    }
+    pspecs = {
+        "in_proj": P("data", "model"),
+        "conv_w": P(None, "model"),
+        "x_proj": P("model", None),
+        "dt_proj": P(None, "model"),
+        "dt_bias": P("model"),
+        "A_log": P("model", None),
+        "D": P("model"),
+        "out_proj": P("model", "data"),
+    }
+    return params, pspecs
+
+
+def _ssm_inner(params, xc, cfg: ModelConfig):
+    """Common post-conv math: returns (dt, A, Bmat, Cmat).
+
+    xc: (B, S, di) conv+silu output.
+    """
+    s = cfg.ssm
+    dtr = s.resolved_dt_rank(cfg.d_model)
+    proj = xc @ params["x_proj"]                     # (B,S,dtr+2N)
+    dt, Bm, Cm = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"]
+                         + params["dt_bias"].astype(dt.dtype))  # (B,S,di)
+    A = -jnp.exp(params["A_log"])                    # (di, N) fp32
+    return dt, A, Bm, Cm
+
+
+def ssm_forward(params, x: jnp.ndarray, cfg: ModelConfig,
+                use_kernel: bool = False, return_state: bool = False):
+    """x: (B,S,D) -> (B,S,D) (optionally also the final SSMState)."""
+    s = cfg.ssm
+    xz = x @ params["in_proj"]
+    xp, z = jnp.split(xz, 2, axis=-1)                # (B,S,di) each
+    xc = scan_utils.causal_conv1d(xp, params["conv_w"])
+    xc = jax.nn.silu(xc)
+    dt, A, Bm, Cm = _ssm_inner(params, xc, cfg)
+    dtf = dt.astype(jnp.float32)
+    # discretize: a = exp(dt*A) (B,S,di,N); b = dt*x*B
+    a = jnp.exp(dtf[..., None] * A)                  # (B,S,di,N)
+    bx = (dtf * xc.astype(jnp.float32))[..., None] * \
+        Bm.astype(jnp.float32)[:, :, None, :]        # (B,S,di,N)
+    h0 = jnp.zeros(a.shape[:1] + a.shape[2:], jnp.float32)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        y, h_last = kernel_ops.ssm_scan(a, bx, Cm.astype(jnp.float32))
+    else:
+        y, h_last = scan_utils.linear_scan_contract(
+            a, bx, Cm.astype(jnp.float32), h0)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if not return_state:
+        return out
+    conv_state = scan_utils.conv_tail(xp, s.d_conv)
+    return out, SSMState(conv=conv_state, h=h_last)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv - 1, di), jnp.dtype(cfg.dtype)),
+        h=jnp.zeros((batch, di, s.d_state), jnp.float32),
+    )
+
+
+def ssm_state_pspec() -> SSMState:
+    return SSMState(conv=P("batch", None, "model"),
+                    h=P("batch", "model", None))
+
+
+def ssm_step(params, state: SSMState, x_new: jnp.ndarray,
+             cfg: ModelConfig) -> Tuple[jnp.ndarray, SSMState]:
+    """Decode step.  x_new: (B,1,D) -> (B,1,D)."""
+    B = x_new.shape[0]
+    xz = x_new[:, 0] @ params["in_proj"]
+    xp, z = jnp.split(xz, 2, axis=-1)                 # (B,di)
+    xc, conv_state = scan_utils.causal_conv1d_step(
+        xp, state.conv, params["conv_w"])
+    xc = jax.nn.silu(xc)
+    dt, A, Bm, Cm = _ssm_inner(params, xc[:, None], cfg)
+    dtf = dt[:, 0].astype(jnp.float32)               # (B,di)
+    a = jnp.exp(dtf[..., None] * A)                  # (B,di,N)
+    bx = (dtf * xc.astype(jnp.float32))[..., None] * \
+        Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h = scan_utils.linear_scan_step(a, bx, state.h)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(x_new.dtype) * jax.nn.silu(z)
+    out = (y @ params["out_proj"])[:, None]
+    return out, SSMState(conv=conv_state, h=h)

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               adamw_pspecs, cosine_schedule,
+                               global_norm, global_norm_clip)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "adamw_pspecs",
+           "cosine_schedule", "global_norm", "global_norm_clip"]

@@ -1,0 +1,96 @@
+"""Resolve abstract PartitionSpecs against a concrete mesh.
+
+Model code writes specs with the placeholder axis ``"batch"`` and logical
+axes ``"data"`` / ``"model"`` / ``"pod"``.  The launcher resolves them:
+
+* ``"batch"`` expands to the mesh's batch axes (``("pod", "data")`` on the
+  multi-pod mesh) — or to no sharding when the actual batch dimension is
+  not divisible by them (long-context decode with global_batch=1).
+* axes missing from the mesh are dropped (a 1D mesh still runs TP specs).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_spec(spec: P, mesh: Mesh, batch_size: Optional[int] = None) -> P:
+    out = []
+    for entry in spec:
+        if entry == "batch":
+            ax = batch_axes(mesh)
+            if not ax:
+                out.append(None)
+            elif batch_size is not None and batch_size % _axes_size(mesh, ax):
+                out.append(None)          # unshardable batch: replicate
+            else:
+                out.append(ax if len(ax) > 1 else ax[0])
+        elif entry is None:
+            out.append(None)
+        else:
+            entries = entry if isinstance(entry, tuple) else (entry,)
+            kept = tuple(a for a in entries if a in mesh.axis_names)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def resolve_spec_for(shape, spec: P, mesh: Mesh,
+                     batch_size: Optional[int] = None) -> P:
+    """Shape-aware resolution: drop mesh axes on non-divisible dims.
+
+    (whisper's 51865 vocab does not divide by 16 — that dim replicates.)
+    """
+    base = resolve_spec(spec, mesh, batch_size)
+    out = []
+    for d, entry in enumerate(base):
+        if entry is None or d >= len(shape):
+            out.append(entry if d < len(shape) else None)
+            continue
+        if shape[d] % _axes_size(mesh, entry) != 0:
+            out.append(None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def resolve_tree(pspecs, mesh: Mesh, batch_size: Optional[int] = None):
+    """Pytree of PartitionSpec -> pytree of NamedSharding."""
+    is_p = lambda x: isinstance(x, P)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, mesh, batch_size)),
+        pspecs, is_leaf=is_p)
+
+
+def resolve_tree_for(shapes, pspecs, mesh: Mesh,
+                     batch_size: Optional[int] = None):
+    """Shape-aware variant: shapes is a matching pytree of arrays or
+    ShapeDtypeStructs; any sharded-but-indivisible dim falls back to
+    replication instead of failing at lower time."""
+    is_p = lambda x: isinstance(x, P)
+    flat_s, treedef = jax.tree.flatten(shapes)
+    flat_p = treedef.flatten_up_to(
+        jax.tree.map(lambda x: x, pspecs, is_leaf=is_p))
+    out = [NamedSharding(mesh, resolve_spec_for(
+        getattr(s, "shape", ()), p, mesh, batch_size))
+        for s, p in zip(flat_s, flat_p)]
+    return treedef.unflatten(out)
+
+
+def spec_tree(pspecs, mesh: Mesh, batch_size: Optional[int] = None):
+    """Pytree of PartitionSpec -> resolved pytree of PartitionSpec."""
+    is_p = lambda x: isinstance(x, P)
+    return jax.tree.map(lambda s: resolve_spec(s, mesh, batch_size),
+                        pspecs, is_leaf=is_p)

@@ -1,0 +1,223 @@
+"""Serving engine with AMOEBA dynamic group splitting.
+
+The engine drives real ``prefill``/``decode_step`` calls.  A *group* is the
+serving analogue of an SM: the fused group decodes its whole batch in
+lockstep, so every tick costs ``capacity`` slot-steps and the batch runs
+until its **longest** member finishes — the warp-waits-for-the-last-thread
+pathology.  The AMOEBA controller watches the remaining-length divergence
+and, past the threshold, splits the group into two halves that admit and
+drain **independently** (the paper's SM split; ``warp_regroup`` sorts by
+remaining work first, ``direct_split`` cuts in arrival order).  Halves
+re-fuse when the divergence signal drops.
+
+Costs are counted in slot-steps (decode slots x ticks — the hardware-time
+unit): a fused tick costs ``capacity``; two split halves tick concurrently
+for the same total.  Useful work is generated tokens, so
+
+    efficiency = useful tokens / slot-steps
+
+is directly comparable across policies, and makespan (ticks) measures
+latency.  Prefill is batched per distinct prompt length (no padding, no
+cross-request contamination).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AmoebaConfig, ModelConfig
+from repro.core.controller import AmoebaController
+from repro.core.regroup import POLICIES, divergence_score
+from repro.models import transformer as T
+from repro.serve import state_utils as su
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        return self.remaining <= 0
+
+
+@dataclass
+class ServeStats:
+    ticks: int = 0                 # wall-time units
+    slot_steps: int = 0            # decode slots x ticks consumed
+    useful_tokens: int = 0
+    prefill_tokens: int = 0
+    splits: int = 0
+    fuses: int = 0
+    completed: int = 0
+
+    @property
+    def efficiency(self) -> float:
+        return self.useful_tokens / max(self.slot_steps, 1)
+
+
+class _Group:
+    """One decode group: live requests + their merged DecodeState."""
+
+    def __init__(self, requests: List[Request], state: T.DecodeState,
+                 last_tokens: jnp.ndarray):
+        self.requests = requests
+        self.state = state
+        self.last = last_tokens            # (B, 1) next input token per row
+
+    @property
+    def remaining(self) -> np.ndarray:
+        return np.array([r.remaining for r in self.requests], np.float64)
+
+
+class ServeEngine:
+    def __init__(self, model_cfg: ModelConfig, params,
+                 rt: T.Runtime = T.Runtime(production=False, remat=False),
+                 amoeba: AmoebaConfig = AmoebaConfig(),
+                 capacity: int = 8, window: int = 256):
+        self.cfg = model_cfg
+        self.params = params
+        self.rt = rt
+        self.acfg = amoeba
+        self.capacity = capacity
+        self.window = window
+        self.queue: collections.deque[Request] = collections.deque()
+        self.stats = ServeStats()
+        self.controller = AmoebaController(amoeba)
+        self._decode = jax.jit(
+            lambda p, s, t: T.decode_step(p, s, t, model_cfg, rt))
+
+    # -- admission -------------------------------------------------------------
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        self.queue.extend(requests)
+
+    def _prefill_wave(self, n_slots: int) -> Optional[_Group]:
+        """Admit up to n_slots queued requests: batch prefill per length."""
+        wave: List[Request] = []
+        while self.queue and len(wave) < n_slots:
+            wave.append(self.queue.popleft())
+        if not wave:
+            return None
+        by_len: Dict[int, List[Request]] = collections.defaultdict(list)
+        for r in wave:
+            by_len[len(r.prompt)].append(r)
+        states, lasts, ordered = [], [], []
+        for plen, reqs in sorted(by_len.items()):
+            toks = jnp.asarray([r.prompt for r in reqs], jnp.int32)
+            logits, st = T.prefill(self.params, {"tokens": toks}, self.cfg,
+                                   self.rt, window=self.window)
+            nxt = jnp.argmax(logits, axis=-1)
+            for r, t in zip(reqs, np.asarray(nxt)):
+                r.generated.append(int(t))
+            self.stats.prefill_tokens += plen * len(reqs)
+            self.stats.useful_tokens += len(reqs)
+            states.append(st)
+            lasts.append(nxt[:, None].astype(jnp.int32))
+            ordered.extend(reqs)
+        return _Group(ordered, su.concat(states),
+                      jnp.concatenate(lasts, axis=0))
+
+    # -- decode ----------------------------------------------------------------
+
+    def _tick_group(self, g: _Group, slots: int) -> None:
+        """One decode step for every live request in the group."""
+        live = [i for i, r in enumerate(g.requests) if not r.done]
+        if not live:
+            return
+        logits, new_state = self._decode(self.params, g.state, g.last)
+        nxt = jnp.argmax(logits, axis=-1)
+        arr = np.asarray(nxt)
+        for i, r in enumerate(g.requests):
+            if not r.done:
+                r.generated.append(int(arr[i]))
+                self.stats.useful_tokens += 1
+        g.state = new_state
+        g.last = nxt[:, None].astype(jnp.int32)
+        self.stats.slot_steps += slots
+
+    def _split_group(self, g: _Group) -> Tuple[_Group, _Group]:
+        idx = list(range(len(g.requests)))
+        fast, slow = POLICIES[self.acfg.regroup_policy](idx, g.remaining)
+        mk = lambda ids: _Group([g.requests[i] for i in ids],
+                                su.take(g.state, ids),
+                                jnp.take(g.last, jnp.asarray(ids), axis=0))
+        return mk(fast), mk(slow)
+
+    # -- main loop ----------------------------------------------------------------
+
+    def run(self, dynamic: bool = True, max_ticks: int = 100_000) -> ServeStats:
+        """Drain the queue.  ``dynamic=False`` = fused-only baseline."""
+        fused: Optional[_Group] = self._prefill_wave(self.capacity)
+        halves: List[Optional[_Group]] = [None, None]
+        split_mode = False
+
+        def group_done(g):
+            return g is None or all(r.done for r in g.requests)
+
+        while self.stats.ticks < max_ticks:
+            if not split_mode:
+                if group_done(fused):
+                    for r in (fused.requests if fused else []):
+                        self.stats.completed += 1
+                    fused = self._prefill_wave(self.capacity)
+                    if fused is None:
+                        break
+                div = divergence_score(fused.remaining)
+                want_split = (dynamic and self.acfg.enabled
+                              and self.controller.observe(
+                                  div, fused.remaining)
+                              and len(fused.requests) >= 2)
+                if want_split:
+                    a, b = self._split_group(fused)
+                    halves = [a, b]
+                    fused = None
+                    split_mode = True
+                    self.stats.splits += 1
+                else:
+                    self._tick_group(fused, self.capacity)
+                    self.stats.ticks += 1
+            else:
+                # both halves tick concurrently (one wall tick); each half
+                # admits new work independently the moment it drains
+                for h in range(2):
+                    if group_done(halves[h]):
+                        for r in (halves[h].requests if halves[h] else []):
+                            self.stats.completed += 1
+                        halves[h] = self._prefill_wave(self.capacity // 2)
+                live = [h for h in halves if h is not None]
+                if not live:
+                    break
+                rem = np.concatenate([h.remaining for h in live])
+                div = divergence_score(rem[rem > 0]) if (rem > 0).any() else 0.
+                if not self.controller.observe(div, rem):
+                    # re-fuse: merge surviving requests into one group
+                    self.stats.fuses += 1
+                    fused = _Group(
+                        sum((h.requests for h in live), []),
+                        su.concat([h.state for h in live]),
+                        jnp.concatenate([h.last for h in live], axis=0))
+                    halves = [None, None]
+                    split_mode = False
+                    continue
+                for h in live:
+                    self._tick_group(h, self.capacity // 2)
+                self.stats.ticks += 1
+        # drain accounting
+        for g in ([fused] if fused else []) + [h for h in halves if h]:
+            for r in g.requests:
+                if r.done:
+                    self.stats.completed += 1
+        return self.stats

@@ -1,0 +1,4 @@
+from repro.train.trainer import Trainer, TrainState
+from repro.train.stragglers import StragglerMonitor
+
+__all__ = ["Trainer", "TrainState", "StragglerMonitor"]

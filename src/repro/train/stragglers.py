@@ -1,0 +1,48 @@
+"""Straggler detection for the synchronous training loop.
+
+At 1000-node scale one slow host gates every step (synchronous SPMD).  The
+monitor tracks a robust EWMA of step wall-time and flags steps beyond
+``threshold`` x the moving estimate.  On a real fleet the flag feeds the
+control plane (re-shard input files away from the slow host, evict it, or let
+the elastic restore shrink the mesh — repro.ckpt handles that path); here
+it records and reports, and the trainer exposes the hook.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0          # x EWMA that counts as a straggle
+    alpha: float = 0.1              # EWMA factor
+    warmup: int = 3                 # ignore compile/first steps
+    on_straggle: Optional[Callable[[int, float, float], None]] = None
+
+    ewma: float = 0.0
+    seen: int = 0
+    events: List[dict] = field(default_factory=list)
+    _t0: float = 0.0
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        self.seen += 1
+        if self.seen <= self.warmup:
+            self.ewma = dt
+            return dt
+        if dt > self.threshold * self.ewma and self.ewma > 0:
+            self.events.append({"step": step, "dt": dt, "ewma": self.ewma})
+            if self.on_straggle:
+                self.on_straggle(step, dt, self.ewma)
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return dt
+
+    @property
+    def straggle_rate(self) -> float:
+        denom = max(self.seen - self.warmup, 1)
+        return len(self.events) / denom

@@ -1,0 +1,298 @@
+"""Fault-tolerant trainer.
+
+One class drives every assigned architecture at every scale: bare CPU for
+the smoke tests, the 16x16 / 2x16x16 production meshes for the dry-run.
+The step function is a single jit (loss -> grad -> clip -> AdamW) with
+in/out shardings resolved from the model's PartitionSpec tree; donation
+keeps params/opt-state memory flat.
+
+Fault tolerance (the 1000-node contract):
+* periodic **async atomic checkpoints** (repro.ckpt) of params + optimizer
+  + data-iterator step; ``train()`` auto-resumes from the newest valid one,
+  and a ``failure_injector`` hook lets tests kill arbitrary steps to prove
+  the resume path is exact (same data order, same loss curve).
+* a **StragglerMonitor** flags slow steps for the control plane.
+* **elastic restarts**: checkpoints are mesh-agnostic, so a resume may use
+  a different plan (repro.ckpt re-lays arrays out; the AMOEBA controller
+  picks the plan).
+
+Divergence telemetry (MoE expert imbalance / dropped-token fraction) is fed
+to the AMOEBA controller each step when one is attached — the training-side
+analogue of warp divergence.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core.controller import AmoebaController
+from repro.core.regroup import moe_divergence
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import adamw_pspecs, adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw import AdamWState, global_norm
+from repro.parallel import resolve, shardctx
+from repro.train.stragglers import StragglerMonitor
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    data_step: jnp.ndarray       # () int32 — exact-resume data cursor
+    residuals: Any = None        # grad-compression error feedback
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class StepMetrics:
+    step: int
+    loss: float
+    grad_norm: float
+    lr: float
+    dt: float
+    divergence: float = 0.0
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, shape: ShapeConfig,
+                 tcfg: TrainConfig = TrainConfig(),
+                 rt: Optional[T.Runtime] = None, mesh=None,
+                 controller: Optional[AmoebaController] = None,
+                 data_cfg: DataConfig = DataConfig(),
+                 state_dtype: Optional[str] = None):
+        self.model_cfg = model_cfg
+        self.shape = shape
+        self.tcfg = tcfg
+        self.rt = rt or T.Runtime(production=mesh is not None,
+                                  remat=tcfg.remat != "none")
+        self.mesh = mesh
+        self.controller = controller
+        self.data = SyntheticLM(model_cfg, shape, data_cfg)
+        self.state_dtype = state_dtype
+        self._pspecs = None
+        self._step_fn = None
+
+    # -- state ----------------------------------------------------------------
+
+    def _fresh_state(self, seed: int) -> TrainState:
+        params, pspecs = T.init_model(jax.random.PRNGKey(seed),
+                                      self.model_cfg)
+        self._pspecs = pspecs
+        opt = adamw_init(params, self.state_dtype)
+        residuals = None
+        if self.tcfg.grad_compression:
+            residuals = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return TrainState(params=params, opt=opt,
+                          data_step=jnp.zeros((), jnp.int32),
+                          residuals=residuals)
+
+    def init_state(self, seed: int = 0) -> TrainState:
+        with shardctx.use_mesh(self.mesh):
+            state = self._fresh_state(seed)
+            if self.mesh is not None:
+                shard = resolve.resolve_tree_for(
+                    jax.eval_shape(lambda: self._fresh_state(seed)),
+                    self.state_pspecs(), self.mesh)
+                state = jax.tree.map(jax.device_put, state, shard)
+        return state
+
+    def state_pspecs(self) -> TrainState:
+        if self._pspecs is None:
+            _, self._pspecs = T.model_pspecs(self.model_cfg)
+        residual_specs = self._pspecs if self.tcfg.grad_compression else None
+        return TrainState(params=self._pspecs,
+                          opt=adamw_pspecs(self._pspecs),
+                          data_step=P(), residuals=residual_specs)
+
+    def _restore_template(self) -> TrainState:
+        return jax.eval_shape(lambda: self._fresh_state(self.tcfg.seed))
+
+    # -- the step ----------------------------------------------------------------
+
+    def make_step_body(self):
+        """The raw (unjitted) step function — the dry-run re-jits it with
+        explicit in/out shardings."""
+        cfg, rt, tcfg = self.model_cfg, self.rt, self.tcfg
+
+        def step_fn(state: TrainState, batch):
+            if tcfg.micro_steps > 1:
+                # gradient accumulation: scan over microbatches keeps the
+                # activation peak to one microbatch's worth
+                k = tcfg.micro_steps
+
+                def micro(carry, mb):
+                    gacc, lacc, macc = carry
+                    (l, m), g = jax.value_and_grad(
+                        lambda p: T.loss_fn(p, mb, cfg, rt),
+                        has_aux=True)(state.params)
+                    gacc = jax.tree.map(
+                        lambda a, b: a + b.astype(a.dtype), gacc, g)
+                    if "expert_load" in m:
+                        macc = {"expert_load":
+                                macc["expert_load"] + m["expert_load"],
+                                "dropped_frac":
+                                macc["dropped_frac"] + m["dropped_frac"]}
+                    return (gacc, lacc + l, macc), None
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                    batch)
+                # accumulate in the params' storage dtype (bf16): an f32
+                # accumulator tree both doubles gradient memory and trips
+                # the SPMD partitioner when combined with the FSDP gather
+                # inside the scan (dynamic-slice verifier failure)
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, p.dtype), state.params)
+                m0 = {}
+                if cfg.moe is not None:
+                    m0 = {"expert_load":
+                          jnp.zeros((cfg.moe.num_experts,), jnp.float32),
+                          "dropped_frac": jnp.zeros((), jnp.float32)}
+                (gsum, lsum, msum), _ = jax.lax.scan(
+                    micro, (g0, jnp.zeros((), jnp.float32), m0), mbs)
+                grads = jax.tree.map(lambda g: g / k, gsum)
+                loss = lsum / k
+                metrics = {kk: v / k for kk, v in msum.items()}
+            else:
+                def loss_of(p):
+                    return T.loss_fn(p, batch, cfg, rt)
+
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(state.params)
+            gnorm = global_norm(grads)
+            gscale = jnp.minimum(1.0, tcfg.grad_clip
+                                 / jnp.maximum(gnorm, 1e-9))
+            new_res = state.residuals
+            if tcfg.grad_compression:
+                # int8 wire-format roundtrip with error feedback: the
+                # numerics of the compressed DP all-reduce (see
+                # repro.parallel.compression for the collective itself)
+                from repro.parallel import compression as C
+                flat_g, td = jax.tree.flatten(grads)
+                flat_r = td.flatten_up_to(state.residuals)
+                gs, rs = [], []
+                for g, r in zip(flat_g, flat_r):
+                    gf = g.astype(jnp.float32) + r
+                    q, s, shp = C.compress_leaf(gf)
+                    deq = C.decompress_leaf(q, s, shp)
+                    gs.append(deq.astype(g.dtype))
+                    rs.append(gf - deq)
+                grads = td.unflatten(gs)
+                new_res = td.unflatten(rs)
+            lr = cosine_schedule(state.opt.step, base_lr=tcfg.learning_rate,
+                                 warmup=tcfg.warmup_steps,
+                                 total=tcfg.total_steps)
+            params, opt = adamw_update(
+                state.params, grads, state.opt, lr=lr,
+                weight_decay=tcfg.weight_decay, grad_scale=gscale)
+            new_state = TrainState(params=params, opt=opt,
+                                   data_step=state.data_step + 1,
+                                   residuals=new_res)
+            out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+            if "expert_load" in metrics:
+                out["expert_load"] = metrics["expert_load"]
+                out["dropped_frac"] = metrics["dropped_frac"]
+            return new_state, out
+
+        return step_fn
+
+    def step_fn(self):
+        if self._step_fn is None:
+            self._step_fn = jax.jit(self.make_step_body(),
+                                    donate_argnums=(0,))
+        return self._step_fn
+
+    def place_batch(self, batch: Dict[str, np.ndarray]):
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        out = {}
+        for k, v in batch.items():
+            spec = resolve.resolve_spec(P("batch"), self.mesh, v.shape[0])
+            out[k] = jax.device_put(jnp.asarray(v),
+                                    NamedSharding(self.mesh, spec))
+        return out
+
+    # -- the loop -------------------------------------------------------------------
+
+    def train(self, steps: int, state: Optional[TrainState] = None,
+              ckpt=None, log_every: int = 10,
+              failure_injector: Optional[Callable[[int], bool]] = None,
+              monitor: Optional[StragglerMonitor] = None
+              ) -> Dict[str, Any]:
+        """Run up to ``steps`` optimizer steps with checkpoint/restart.
+
+        Returns {"state", "history", "monitor", "resumes"}.
+        """
+        monitor = monitor or StragglerMonitor()
+        history: List[StepMetrics] = []
+        resumes = 0
+
+        if state is None:
+            restored = False
+            if ckpt is not None:
+                try:
+                    _, state, _ = ckpt.restore(
+                        like=self._restore_template(),
+                        pspecs=self.state_pspecs() if self.mesh else None,
+                        mesh=self.mesh)
+                    restored = True
+                    resumes += 1
+                except FileNotFoundError:
+                    pass
+            if not restored:
+                state = self.init_state(self.tcfg.seed)
+
+        fn = self.step_fn()
+        with shardctx.use_mesh(self.mesh):
+            k = int(jax.device_get(state.data_step))
+            while k < steps:
+                try:
+                    if failure_injector is not None and failure_injector(k):
+                        raise SimulatedFailure(f"injected failure at step {k}")
+                    batch = self.place_batch(self.data.batch_at(k))
+                    monitor.start()
+                    state, out = fn(state, batch)
+                    loss = float(jax.device_get(out["loss"]))
+                    dt = monitor.stop(k)
+                    div = 0.0
+                    if "expert_load" in out:
+                        div = moe_divergence(
+                            np.asarray(jax.device_get(out["expert_load"])))
+                        if self.controller is not None:
+                            self.controller.observe(div)
+                    history.append(StepMetrics(
+                        step=k, loss=loss,
+                        grad_norm=float(jax.device_get(out["grad_norm"])),
+                        lr=float(jax.device_get(out["lr"])), dt=dt,
+                        divergence=div))
+                    k += 1
+                    if ckpt is not None and k % self.tcfg.checkpoint_every == 0:
+                        ckpt.save(k, state, extra={"k": k})
+                except SimulatedFailure:
+                    # crash/restart path: reload newest durable checkpoint
+                    if ckpt is None:
+                        raise
+                    ckpt.wait()
+                    try:
+                        _, state, _ = ckpt.restore(
+                            like=self._restore_template(),
+                            pspecs=self.state_pspecs() if self.mesh else None,
+                            mesh=self.mesh)
+                    except FileNotFoundError:
+                        state = self.init_state(self.tcfg.seed)
+                    k = int(jax.device_get(state.data_step))
+                    resumes += 1
+            if ckpt is not None:
+                ckpt.save(steps, state, extra={"k": steps}, blocking=True)
+        return {"state": state, "history": history, "monitor": monitor,
+                "resumes": resumes}

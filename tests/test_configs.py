@@ -1,0 +1,53 @@
+"""Config registry + analytic parameter accounting."""
+import jax
+import pytest
+
+from repro.configs import (ARCH_IDS, LM_SHAPES, all_cells, get_config,
+                           shape_applicable)
+from repro.models import transformer as T
+
+
+def test_registry_has_all_ten():
+    assert len(ARCH_IDS) == 10
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        assert cfg.name == a
+
+
+def test_forty_cells():
+    cells = all_cells()
+    assert len(cells) == 40
+    skipped = [(a, s) for a, s, ok in cells if not ok]
+    # long_500k skips exactly the pure-full-attention archs
+    assert all(s == "long_500k" for _, s in skipped)
+    runs_long = {a for a, s, ok in cells if s == "long_500k" and ok}
+    assert runs_long == {"recurrentgemma-9b", "falcon-mamba-7b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_matches_implementation(arch):
+    cfg = get_config(arch, reduced=True)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    assert T.count_params(params) == cfg.param_count()
+
+
+def test_full_scale_param_counts_sane():
+    # headline sizes within 25% of the nameplate (names are nominal)
+    expect = {"nemotron-4-340b": 341e9, "arctic-480b": 482e9,
+              "falcon-mamba-7b": 7.3e9, "qwen3-14b": 14.8e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < 0.25, (arch, got)
+
+
+def test_moe_active_params_smaller():
+    for arch in ("deepseek-moe-16b", "arctic-480b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+def test_shape_applicability():
+    cfg = get_config("qwen3-14b")
+    long = [s for s in LM_SHAPES if s.name == "long_500k"][0]
+    assert not shape_applicable(cfg, long)
+    assert shape_applicable(get_config("falcon-mamba-7b"), long)

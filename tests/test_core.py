@@ -1,0 +1,127 @@
+"""Predictor, controller, fusion plans, regrouping, metrics parsing."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AmoebaConfig
+from repro.core import (AmoebaController, MeshPlan, StepProfile,
+                        collective_bytes, plan_family, predict_fuse,
+                        train_logistic)
+from repro.core import predictor as P
+from repro.core import regroup as R
+from repro.core.fusion import amortized_switch_ok, reshard_cost_s
+
+
+def test_logistic_learns_separable():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(400, 3))
+    y = (X @ np.array([2.0, -1.0, 0.5]) + 0.3 > 0).astype(float)
+    model, info = train_logistic(X, y, feature_names=("a", "b", "c"))
+    assert info["train_accuracy"] > 0.95
+    assert float(model.w[0]) > 0 and float(model.w[1]) < 0
+
+
+def test_logistic_save_load_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(100, 4))
+    y = (X[:, 0] > 0).astype(float)
+    model, _ = train_logistic(X, y, feature_names=tuple("abcd"))
+    path = os.path.join(tmp_path, "m.json")
+    P.save_model(model, path)
+    m2 = P.load_model(path)
+    x = np.array([0.5, -1, 2, 0.1])
+    assert abs(float(P.predict_proba(model, x))
+               - float(P.predict_proba(m2, x))) < 1e-6
+
+
+def test_feature_impacts_sum_to_logit():
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(50, 3))
+    y = (X[:, 0] > 0).astype(float)
+    model, _ = train_logistic(X, y)
+    x = X[0]
+    impacts = P.feature_impacts(model, x)
+    z = float(np.sum(np.asarray(impacts)) + model.b)
+    p = float(P.predict_proba(model, x))
+    assert abs(1 / (1 + np.exp(-z)) - p) < 1e-5
+
+
+def test_plan_family_shapes():
+    fam = plan_family(MeshPlan("base", data=16, model=16))
+    assert fam["fused"].shape == (8, 32)
+    assert fam["scale_out"].shape == (32, 8)
+    assert all(p.num_devices == 256 for p in fam.values())
+
+
+def test_amortization_veto():
+    # 1 GB/chip resharded over 50 GB/s ICI = 0.04 s; gain must repay it
+    assert not amortized_switch_ok(1e-4, 1e9, 10)
+    assert amortized_switch_ok(1e-3, 1e9, 100)
+
+
+def test_collective_bytes_parser():
+    hlo = """
+      %a = bf16[1024,512] all-reduce(bf16[1024,512] %x)
+      %b = f32[2048] all-gather(f32[512] %y), dimensions={0}
+      %c = bf16[64,128] reduce-scatter(bf16[512,128] %z)
+      %d = s32[10] add(s32[10] %p, s32[10] %q)
+    """
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 1024 * 512 * 2
+    assert got["all-gather"] == 2048 * 4
+    assert got["reduce-scatter"] == 64 * 128 * 2
+    assert got["all-to-all"] == 0
+
+
+def test_roofline_terms():
+    p = StepProfile("t", flops=197e12, hbm_bytes=819e9, coll_bytes=50e9,
+                    chips=256, model_flops=197e12 * 256)
+    r = p.roofline()
+    assert abs(r["compute_s"] - 1.0) < 1e-6
+    assert abs(r["memory_s"] - 1.0) < 1e-6
+    assert abs(r["collective_s"] - 1.0) < 1e-6
+    assert r["roofline_frac"] == pytest.approx(1.0)
+
+
+def test_controller_roofline_choice_and_veto():
+    ctl = AmoebaController(AmoebaConfig())
+    base = StepProfile("s", flops=1e12, hbm_bytes=1e9, coll_bytes=5e9,
+                       chips=256)
+    fused = StepProfile("s", flops=1e12, hbm_bytes=1e9, coll_bytes=2e9,
+                        chips=256)
+    d = ctl.choose_plan({"base": base, "fused": fused},
+                        param_bytes_per_chip=1e8, steps_remaining=1e6)
+    assert d.plan == "fused"
+    d2 = ctl.choose_plan({"base": base, "fused": fused},
+                         param_bytes_per_chip=1e12, steps_remaining=1)
+    assert d2.plan == "base"
+    assert "amortize" in d2.reason
+
+
+def test_controller_split_fuse_hysteresis():
+    ctl = AmoebaController(AmoebaConfig(min_phase_steps=2,
+                                        split_threshold=0.3,
+                                        fuse_threshold=0.1))
+    lens = np.array([100.0, 5.0, 90.0, 3.0])
+    states = [ctl.observe(R.divergence_score(lens), lens) for _ in range(4)]
+    assert states[-1] is True
+    fast, slow = ctl.layout([0, 1, 2, 3], lens)
+    assert set(fast) == {1, 3} and set(slow) == {0, 2}
+    # low divergence -> re-fuse after dwell
+    calm = np.array([5.0, 5.0, 5.0, 5.0])
+    states = [ctl.observe(R.divergence_score(calm), calm) for _ in range(4)]
+    assert states[-1] is False
+
+
+def test_regroup_beats_direct_on_interleaved():
+    lens = [100.0, 4.0, 90.0, 6.0, 80.0, 5.0]
+    assert R.regroup_gain(lens, "warp_regroup") > \
+        R.regroup_gain(lens, "direct_split")
+
+
+def test_moe_divergence_bounds():
+    assert R.moe_divergence([0.25] * 4) == pytest.approx(0.0)
+    assert 0.7 < R.moe_divergence([0.97, 0.01, 0.01, 0.01]) < 1.0

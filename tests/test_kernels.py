@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("B,S,Skv,H,KV,hd", [
+    (1, 64, 64, 4, 4, 32),      # MHA square
+    (2, 96, 96, 8, 2, 64),      # GQA, non-block-multiple seq
+    (1, 33, 128, 4, 1, 64),     # MQA, cross shapes
+    (2, 200, 200, 8, 4, 128),   # 128-lane head dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 48)])
+def test_flash_attention_sweep(B, S, Skv, H, KV, hd, dtype, causal, window):
+    if Skv != S and causal:
+        pytest.skip("causal cross-shape undefined")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,W,bs,bw", [
+    (1, 64, 64, 32, 32),
+    (2, 100, 96, 32, 64),      # padded seq
+    (1, 257, 33, 64, 16),      # padded width
+])
+def test_rglru_scan_sweep(B, S, W, bs, bw):
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    a = jax.random.uniform(ks[0], (B, S, W), jnp.float32, 0.4, 0.999)
+    b = jax.random.normal(ks[1], (B, S, W), jnp.float32)
+    got = ops.rglru_scan(a, b, bs=bs, bw=bw)
+    want = ref.rglru_scan(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,D,N,bs,bd", [
+    (1, 64, 64, 8, 32, 32),
+    (2, 77, 96, 16, 32, 64),
+    (1, 130, 48, 4, 64, 48),
+])
+def test_ssm_scan_sweep(B, S, D, N, bs, bd):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a = jax.random.uniform(ks[0], (B, S, D, N), jnp.float32, 0.4, 0.999)
+    b = jax.random.normal(ks[1], (B, S, D, N), jnp.float32) * 0.1
+    c = jax.random.normal(ks[2], (B, S, N), jnp.float32)
+    y, h = ops.ssm_scan(a, b, c, bs=bs, bd=bd)
+    yr, hr = ref.ssm_scan(a, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("T,D", [(16, 128), (37, 256), (100, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(T, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = jax.random.normal(ks[0], (T, D), dtype)
+    sc = jax.random.normal(ks[1], (D,), jnp.float32)
+    got = ops.rmsnorm(x, sc, bt=16)
+    want = ref.rmsnorm(x, sc)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("T,D", [(8, 64), (33, 257), (128, 1024)])
+def test_quantize_sweep(T, D):
+    x = jax.random.normal(jax.random.PRNGKey(4), (T, D), jnp.float32) * 3.0
+    qg, sg = ops.quantize_int8(x, bt=16)
+    qr, sr = ref.quantize_int8(x)
+    assert int(jnp.max(jnp.abs(qg.astype(jnp.int32)
+                               - qr.astype(jnp.int32)))) <= 1
+    np.testing.assert_allclose(np.asarray(sg), np.asarray(sr), rtol=1e-6)
+    # reconstruction error bounded by half a quantization step per row
+    deq = ops.dequantize_int8(qg, sg)
+    err = jnp.max(jnp.abs(deq - x), axis=1)
+    bound = jnp.max(jnp.abs(x), axis=1) / 127.0
+    assert bool(jnp.all(err <= bound * 1.01))

@@ -1,0 +1,72 @@
+"""AdamW math (incl. the lax.map stacked-leaf path) and schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         global_norm, global_norm_clip)
+
+
+def _reference_adamw(p, g, m, v, t, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    return p - lr * (mh / (np.sqrt(vh) + eps) + wd * p), m, v
+
+
+def test_adamw_matches_reference():
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+    st = adamw_init(p)
+    lr = 1e-2
+    new_p, st2 = adamw_update(p, g, st, lr=lr)
+    ref_p, ref_m, ref_v = _reference_adamw(
+        np.asarray(p["w"]), np.asarray(g["w"]),
+        np.zeros((4, 5)), np.zeros((4, 5)), 1, lr)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), ref_p, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(st2.m["w"]), ref_m, rtol=1e-5)
+    assert int(st2.step) == 1
+
+
+def test_adamw_stacked_map_path_matches_direct():
+    """ndim>=3 leaves go through lax.map — must equal the direct math."""
+    rng = np.random.default_rng(1)
+    stacked = jnp.asarray(rng.normal(size=(12, 6, 4)), jnp.float32)
+    gs = jnp.asarray(rng.normal(size=(12, 6, 4)), jnp.float32)
+    p1 = {"w": stacked}
+    st1 = adamw_init(p1)
+    out1, _ = adamw_update(p1, {"w": gs}, st1, lr=1e-2)
+    # same update applied layer-by-layer through the 2D path
+    outs = []
+    for i in range(12):
+        pi = {"w": stacked[i]}
+        sti = adamw_init(pi)
+        oi, _ = adamw_update(pi, {"w": gs[i]}, sti, lr=1e-2)
+        outs.append(np.asarray(oi["w"]))
+    np.testing.assert_allclose(np.asarray(out1["w"]), np.stack(outs),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_grad_scale_equals_explicit_clip():
+    rng = np.random.default_rng(2)
+    p = {"w": jnp.asarray(rng.normal(size=(3, 3)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(3, 3)) * 10, jnp.float32)}
+    norm = global_norm(g)
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(norm, 1e-9))
+    clipped, norm2 = global_norm_clip(g, 1.0)
+    assert abs(float(norm) - float(norm2)) < 1e-5
+    o1, _ = adamw_update(p, g, adamw_init(p), lr=1e-2, grad_scale=scale)
+    o2, _ = adamw_update(p, clipped, adamw_init(p), lr=1e-2)
+    np.testing.assert_allclose(np.asarray(o1["w"]), np.asarray(o2["w"]),
+                               rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = [float(cosine_schedule(jnp.asarray(s), base_lr=1.0, warmup=10,
+                                total=100)) for s in range(100)]
+    assert lr[0] == 0.0
+    assert abs(lr[10] - 1.0) < 0.11
+    assert lr[99] < 0.2
+    assert all(a >= b - 1e-6 for a, b in zip(lr[10:], lr[11:]))  # decreasing

@@ -1,0 +1,113 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import regroup as R
+from repro.kernels import ref
+from repro.models import scan_utils
+from repro.parallel import compression as C
+
+lengths = st.lists(st.floats(min_value=0.0, max_value=1e4,
+                             allow_nan=False, allow_infinity=False),
+                   min_size=2, max_size=32)
+
+
+@given(lengths)
+@settings(max_examples=100, deadline=None)
+def test_divergence_score_in_unit_interval(r):
+    d = R.divergence_score(r)
+    assert 0.0 <= d < 1.0 + 1e-12
+
+
+@given(lengths)
+@settings(max_examples=100, deadline=None)
+def test_split_gains_nonnegative(r):
+    """Splitting can never cost slot-steps: each half's max <= global max."""
+    for policy in ("warp_regroup", "direct_split"):
+        assert R.regroup_gain(r, policy) >= -1e-12
+
+
+even_lengths = lengths.filter(lambda r: len(r) % 2 == 0)
+
+
+@given(even_lengths)
+@settings(max_examples=100, deadline=None)
+def test_warp_regroup_is_optimal_bipartition(r):
+    """For equal halves (the paper's two equal SM slices), the sorted split
+    minimizes sum of half-costs, so regrouping dominates the direct mid-cut.
+    (With odd batches and unequal halves the claim does not hold — the
+    engine always splits a fused group into two equal halves.)"""
+    assert R.regroup_gain(r, "warp_regroup") >= \
+        R.regroup_gain(r, "direct_split") - 1e-12
+
+
+@given(st.integers(1, 4), st.integers(1, 96), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_linear_scan_chunking_invariant(B, S, W, seed):
+    """Chunked associative scan == sequential recurrence, any chunk size."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    a = jax.random.uniform(ks[0], (B, S, W), jnp.float32, 0.0, 1.0)
+    b = jax.random.normal(ks[1], (B, S, W), jnp.float32)
+    want = ref.rglru_scan(a, b)
+    for chunk in (1, 3, 17, 256):
+        got, last = scan_utils.linear_scan(a, b, jnp.zeros((B, W)),
+                                           chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(last), np.asarray(want[:, -1]),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@given(st.integers(1, 64), st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_int8_roundtrip_error_bound(T, D, seed):
+    """|x - dequant(quant(x))| <= rowwise amax/127/2 * (1+eps)."""
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (T, D),
+                                     jnp.float32)) * 10
+    q, s, shape = C.compress_leaf(jnp.asarray(x))
+    deq = np.asarray(C.decompress_leaf(q, s, shape))
+    # rows of the padded (R, 1024) layout each have their own scale
+    flat = x.reshape(-1)
+    err = np.abs(deq.reshape(-1) - flat)
+    # global bound: half step of the largest row scale
+    bound = np.abs(flat).max() / 127.0 * 0.5 + 1e-6
+    assert err.max() <= bound * 1.05
+
+
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_error_feedback_converges(k, seed):
+    """Repeated compression with error feedback transmits the signal:
+    cumulative dequantized sum -> cumulative true sum."""
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (8, 64),
+                                     jnp.float32))
+    res = np.zeros_like(g)
+    sent_total = np.zeros_like(g)
+    for _ in range(k):
+        q, s, shape = C.compress_leaf(jnp.asarray(g + res))
+        deq = np.asarray(C.decompress_leaf(q, s, shape))
+        res = (g + res) - deq
+        sent_total += deq
+    # after k steps, total sent = k*g - residual, residual bounded by 1 step
+    err = np.abs(sent_total - k * g).max()
+    step = np.abs(g).max() / 127.0
+    assert err <= step * 1.5
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 12))
+@settings(max_examples=20, deadline=None)
+def test_ring_cache_validity_mask(seed, W):
+    """Ring slots report valid iff they hold a live absolute position."""
+    from repro.models.attention import _ring_valid
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.integers(0, 40, size=(3,)), jnp.int32)
+    slots = jnp.arange(W)
+    valid = np.asarray(_ring_valid(pos, W, slots))
+    for b in range(3):
+        p = int(pos[b])
+        for i in range(W):
+            live = p - ((p - i) % W)
+            assert valid[b, i] == (live >= 0)
