@@ -16,7 +16,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import figures, mesh_amoeba, roofline  # noqa: E402
+from benchmarks import figures, fleet_bench, mesh_amoeba, roofline  # noqa: E402
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                    "bench_results.json")
@@ -32,6 +32,7 @@ BENCHES = {
     "roofline": lambda: {"cells": roofline.main()},
     "mesh_plan_selection": mesh_amoeba.plan_selection,
     "serving_regroup": mesh_amoeba.serving_regroup,
+    "fleet": fleet_bench.fleet_bench,
 }
 
 

@@ -250,6 +250,28 @@ class AmoebaConfig:
 
 
 @dataclass(frozen=True)
+class FleetConfig:
+    """A serving fleet of N independently reconfigurable pairs.
+
+    The serving analogue of the paper's full chip (24 SM pairs, each free
+    to fuse or split on its own): ``num_groups`` pairs behind one request
+    router.  ``mode`` pins every pair's allowed configuration — ``fused``
+    and ``split`` are the static baselines, ``dynamic`` is AMOEBA.
+    """
+    num_groups: int = 4
+    capacity: int = 8               # decode slots per pair (fused width)
+    window: int = 256               # KV window passed to prefill
+    router: str = "least_loaded"    # round_robin | least_loaded | length_aware
+    mode: str = "dynamic"           # dynamic | fused | split
+    long_threshold: int = 24        # length_aware: predicted-long cutoff
+    telemetry_window: int = 256     # rolling-stat window, wall ticks
+    amoeba: AmoebaConfig = AmoebaConfig()
+
+    def replace(self, **kw) -> "FleetConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     learning_rate: float = 3e-4
     warmup_steps: int = 100

@@ -1,0 +1,223 @@
+"""Fleet scheduler: N reconfigurable pairs behind a request router.
+
+This is the serving translation of the paper's full chip: AMOEBA's 24 SM
+pairs each fuse or split *independently*, so at any instant the chip is a
+heterogeneous mix of big fused SMs and nimble split halves.  Here each
+:class:`~repro.serve.engine.ReconfigurableGroup` is one pair (own
+controller, own admission queue, own split state) and the
+:class:`FleetEngine` is the chip-level layer the single-pair
+``ServeEngine`` could not express: a shared arrival stream, a routing
+policy that decides *which* pair absorbs each request, and a wall clock
+that ticks all pairs concurrently.
+
+Routing policies (pluggable via ``FleetConfig.router`` or the
+``ROUTERS`` registry):
+
+* ``round_robin``   — arrival order striped across groups.
+* ``least_loaded``  — minimize outstanding decode work (live remaining +
+  queued budgets).
+* ``length_aware``  — the heterogeneous-SM assignment: predicted-long
+  requests go to already-split groups (whose slow halves quarantine
+  tails), short requests prefer fused groups (which drain lockstep
+  batches at full width); ties fall back to least-loaded.
+
+All pairs share one jitted ``decode_step`` (same params, same model), so
+the XLA compile cache is shared across the fleet exactly as the paper's
+SMs share one instruction front-end.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.configs.base import FleetConfig, ModelConfig
+from repro.fleet.telemetry import FleetTelemetry
+from repro.models import transformer as T
+from repro.serve.engine import (IDLE, TICKED, ReconfigurableGroup, Request,
+                                make_decode_fn)
+
+
+# -- routing policies ----------------------------------------------------------
+# signature: (request, groups, state) -> group index; ``state`` is a dict the
+# policy may use to persist across calls (e.g. the round-robin cursor).
+
+def route_round_robin(req: Request, groups: Sequence[ReconfigurableGroup],
+                      state: Dict) -> int:
+    i = (state.get("rr", -1) + 1) % len(groups)
+    state["rr"] = i
+    return i
+
+
+def route_least_loaded(req: Request, groups: Sequence[ReconfigurableGroup],
+                       state: Dict) -> int:
+    return min(range(len(groups)), key=lambda i: (groups[i].load(), i))
+
+
+def route_length_aware(req: Request, groups: Sequence[ReconfigurableGroup],
+                       state: Dict) -> int:
+    """Bin by predicted length onto the heterogeneous group mix."""
+    thresh = state.get("long_threshold", FleetConfig.long_threshold)
+    is_long = req.max_new_tokens >= thresh
+    pref = [i for i, g in enumerate(groups) if g.is_split == is_long]
+    pool = pref if pref else range(len(groups))
+    return min(pool, key=lambda i: (groups[i].load(), i))
+
+
+ROUTERS: Dict[str, Callable] = {
+    "round_robin": route_round_robin,
+    "least_loaded": route_least_loaded,
+    "length_aware": route_length_aware,
+}
+
+
+class FleetEngine:
+    """N independently reconfigurable groups draining a shared arrival stream.
+
+    ``submit`` accepts requests with ``arrival`` ticks (a trace from
+    ``repro.fleet.traffic``) or plain requests (arrive immediately).  The
+    router assigns each request to a group's queue the tick it arrives —
+    so ``length_aware`` sees the fleet's *current* split topology, which
+    is the point of routing onto a heterogeneous chip.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, params,
+                 rt: T.Runtime = T.Runtime(production=False, remat=False),
+                 fleet: FleetConfig = FleetConfig(),
+                 decode_fn: Optional[Callable] = None):
+        if fleet.num_groups < 1:
+            raise ValueError("fleet needs at least one group")
+        if fleet.router not in ROUTERS:
+            raise ValueError(f"unknown router {fleet.router!r}; "
+                             f"have {sorted(ROUTERS)}")
+        self.cfg = model_cfg
+        self.params = params
+        self.rt = rt
+        self.fleet = fleet
+        # one compiled decode shared by every group (per batch shape);
+        # callers comparing several fleets can pass one in to share it wider
+        self._decode = decode_fn or make_decode_fn(model_cfg, rt)
+        self.groups = [
+            ReconfigurableGroup(
+                model_cfg, params, rt=rt, amoeba=fleet.amoeba,
+                capacity=fleet.capacity, window=fleet.window,
+                mode=fleet.mode, gid=i, decode_fn=self._decode)
+            for i in range(fleet.num_groups)]
+        self._router = ROUTERS[fleet.router]
+        self._router_state: Dict = {"long_threshold": fleet.long_threshold}
+        self.telemetry = FleetTelemetry(fleet.telemetry_window)
+        self.requests: List[Request] = []
+        self._pending: collections.deque[Request] = collections.deque()
+        self.wall = 0
+
+    # -- admission -------------------------------------------------------------
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        """Queue requests for delivery at their ``arrival`` tick."""
+        self.requests.extend(requests)
+        merged = sorted(list(self._pending) + list(requests),
+                        key=lambda r: r.arrival)
+        self._pending = collections.deque(merged)
+
+    def _deliver(self) -> None:
+        while self._pending and self._pending[0].arrival <= self.wall:
+            r = self._pending.popleft()
+            r.arrival = max(r.arrival, 0)
+            gi = self._router(r, self.groups, self._router_state)
+            self.groups[gi].submit([r])
+
+    # -- main loop ----------------------------------------------------------------
+
+    def run(self, dynamic: bool = True,
+            max_ticks: int = 1_000_000) -> Dict:
+        """Drive the fleet until the trace is fully drained (or max_ticks)."""
+        while self.wall < max_ticks:
+            self._deliver()
+            statuses = [g.step(dynamic=dynamic, now=self.wall)
+                        for g in self.groups]
+            ticked = sum(s == TICKED for s in statuses)
+            if all(s == IDLE for s in statuses):
+                if not self._pending:
+                    # terminal probe: the trace is drained, not an idle tick
+                    break
+                # fast-forward the idle gap to the next arrival, never
+                # past the caller's tick bound
+                nxt = min(max(self.wall + 1, self._pending[0].arrival),
+                          max_ticks)
+                self.telemetry.on_tick(self.wall, self.groups, 0,
+                                       all_idle=True)
+                self.telemetry.on_idle_gap(nxt - self.wall - 1,
+                                           len(self.groups))
+                self.wall = nxt
+                continue
+            self.telemetry.on_tick(self.wall, self.groups, ticked)
+            self.wall += 1
+        for g in self.groups:
+            g.finalize()
+        return self.telemetry.summary(self.groups, self.requests)
+
+    # -- aggregates -------------------------------------------------------------
+
+    @property
+    def completed(self) -> int:
+        return sum(g.stats.completed for g in self.groups)
+
+    @property
+    def useful_tokens(self) -> int:
+        return sum(g.stats.useful_tokens for g in self.groups)
+
+    @property
+    def slot_steps(self) -> int:
+        return sum(g.stats.slot_steps for g in self.groups)
+
+
+# -- chip-configuration comparison ---------------------------------------------
+
+# (label, group mode, router): the three chip configurations of Fig 12 —
+# big-SMs-only, small-SMs-only, and AMOEBA free to pick per pair.
+DEFAULT_MODES = (
+    ("static_fused", "fused", "least_loaded"),
+    ("static_split", "split", "least_loaded"),
+    ("amoeba_dynamic", "dynamic", "length_aware"),
+)
+
+
+def replay_modes(model_cfg: ModelConfig, params, rt: T.Runtime,
+                 trace_factory: Callable[[], Sequence[Request]], *,
+                 groups: int, capacity: int,
+                 amoeba=None, window: int = 256,
+                 modes: Sequence = DEFAULT_MODES,
+                 verbose: bool = True) -> Dict[str, Dict]:
+    """Replay identical traces through several fleet configurations.
+
+    ``trace_factory`` must return a *fresh* trace per call (replaying
+    mutates the requests); same factory + same seed = byte-identical
+    load for every mode.  One compiled decode is shared across modes so
+    differences are purely scheduling.  Used by both the fleet benchmark
+    and the demo — raises if any mode fails to drain its trace.
+    """
+    from repro.configs.base import AmoebaConfig
+    amoeba = amoeba or AmoebaConfig()
+    decode = make_decode_fn(model_cfg, rt)
+    out: Dict[str, Dict] = {}
+    for label, mode, router in modes:
+        trace = trace_factory()
+        eng = FleetEngine(model_cfg, params, rt=rt, decode_fn=decode,
+                          fleet=FleetConfig(
+                              num_groups=groups, capacity=capacity,
+                              router=router, mode=mode, window=window,
+                              amoeba=amoeba))
+        eng.submit(trace)
+        s = eng.run()
+        if s["completed"] != len(trace):
+            raise RuntimeError(f"{label}: completed {s['completed']} of "
+                               f"{len(trace)} requests")
+        out[label] = s
+        if verbose:
+            lat = s["latency"]
+            print(f"{label:15s} ticks={s['wall_ticks']:4d} "
+                  f"eff={s['efficiency']:.3f} "
+                  f"p50={lat['p50']:5.1f} p95={lat['p95']:5.1f} "
+                  f"p99={lat['p99']:5.1f} util={s['utilization']:.2f} "
+                  f"churn/kt={s['churn_per_kilotick']:.0f} "
+                  f"done={s['completed']}/{s['submitted']}")
+    return out

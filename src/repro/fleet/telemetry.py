@@ -1,0 +1,171 @@
+"""Per-group and fleet-wide serving telemetry.
+
+The fleet's wall clock is the tick; every tick the engine reports which
+groups decoded.  From those samples plus the per-group ``ServeStats`` and
+the completion stamps on the requests themselves, this module derives the
+quantities the benchmarks compare:
+
+* slot-step efficiency (useful tokens / slot-steps) — the paper's
+  utilization metric lifted to the fleet,
+* request latency percentiles (p50/p95/p99, per tenant too),
+* throughput (tokens and requests per wall tick, plus a rolling window),
+* reconfiguration churn (splits+fuses per kilotick),
+* utilization (fraction of group-ticks that decoded).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.engine import Request, ServeStats
+
+
+class RollingWindow:
+    """Cumulative-counter samples over a sliding window of wall ticks."""
+
+    def __init__(self, window: int = 256):
+        self.window = window
+        self._samples: Deque[Tuple[int, float]] = collections.deque()
+
+    def push(self, tick: int, cumulative: float) -> None:
+        self._samples.append((tick, cumulative))
+        while self._samples and self._samples[0][0] < tick - self.window:
+            self._samples.popleft()
+
+    def rate(self) -> float:
+        """Mean increase per tick across the retained window."""
+        if len(self._samples) < 2:
+            return 0.0
+        (t0, v0), (t1, v1) = self._samples[0], self._samples[-1]
+        return (v1 - v0) / max(t1 - t0, 1)
+
+
+@dataclass
+class GroupSnapshot:
+    gid: int
+    mode: str
+    is_split: bool
+    queue_depth: int
+    live: int
+    stats: ServeStats
+
+    def as_dict(self) -> Dict:
+        return {
+            "gid": self.gid, "mode": self.mode, "is_split": self.is_split,
+            "queue_depth": self.queue_depth, "live": self.live,
+            "ticks": self.stats.ticks, "slot_steps": self.stats.slot_steps,
+            "useful_tokens": self.stats.useful_tokens,
+            "efficiency": round(self.stats.efficiency, 4),
+            "splits": self.stats.splits, "fuses": self.stats.fuses,
+            "completed": self.stats.completed,
+        }
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    if not len(values):
+        return 0.0
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+class FleetTelemetry:
+    """Collects tick samples during a run and summarizes at the end."""
+
+    def __init__(self, window: int = 256):
+        self.window = window
+        self.wall_ticks = 0
+        self.idle_ticks = 0
+        self.active_group_ticks = 0
+        self.group_tick_slots = 0
+        self.tokens_window = RollingWindow(window)
+        self.done_window = RollingWindow(window)
+        self.queue_depths: List[int] = []
+
+    # -- during the run --------------------------------------------------------
+
+    def on_tick(self, tick: int, groups, ticked: int,
+                all_idle: bool = False) -> None:
+        self.wall_ticks = tick + 1
+        self.active_group_ticks += ticked
+        self.group_tick_slots += len(groups)
+        if all_idle:
+            # a reconfig-only tick (ticked == 0 but not idle) is churn, not
+            # idleness — only a fleet-wide IDLE probe counts here
+            self.idle_ticks += 1
+        self.tokens_window.push(
+            tick, sum(g.stats.useful_tokens for g in groups))
+        self.done_window.push(
+            tick, sum(g.stats.completed for g in groups))
+        self.queue_depths.append(sum(len(g.queue) for g in groups))
+
+    def on_idle_gap(self, ticks: int, n_groups: int) -> None:
+        """Account for wall ticks the engine fast-forwarded while idle,
+        so utilization/idle_ticks/queue depth stay consistent with
+        wall_ticks."""
+        if ticks <= 0:
+            return
+        self.wall_ticks += ticks
+        self.idle_ticks += ticks
+        self.group_tick_slots += ticks * n_groups
+        self.queue_depths.extend([0] * ticks)
+
+    # -- at the end -------------------------------------------------------------
+
+    @staticmethod
+    def latencies(requests: Sequence[Request],
+                  tenant: Optional[str] = None) -> np.ndarray:
+        lats = [r.latency for r in requests
+                if r.finish is not None
+                and (tenant is None or r.tenant == tenant)]
+        return np.asarray(lats, np.float64)
+
+    def summary(self, groups, requests: Sequence[Request]) -> Dict:
+        snaps = [GroupSnapshot(
+            gid=g.gid, mode=g.mode, is_split=g.is_split,
+            queue_depth=len(g.queue), live=len(g.live_requests()),
+            stats=g.stats) for g in groups]
+        slot_steps = sum(g.stats.slot_steps for g in groups)
+        useful = sum(g.stats.useful_tokens for g in groups)
+        completed = sum(g.stats.completed for g in groups)
+        churn = sum(g.stats.splits + g.stats.fuses for g in groups)
+        lats = self.latencies(requests)
+        wall = max(self.wall_ticks, 1)
+        out = {
+            "wall_ticks": self.wall_ticks,
+            "idle_ticks": self.idle_ticks,
+            "slot_steps": slot_steps,
+            "useful_tokens": useful,
+            "completed": completed,
+            "submitted": len(requests),
+            "efficiency": round(useful / max(slot_steps, 1), 4),
+            "throughput_tokens_per_tick": round(useful / wall, 3),
+            "throughput_requests_per_tick": round(completed / wall, 4),
+            "rolling_tokens_per_tick": round(self.tokens_window.rate(), 3),
+            "rolling_requests_per_tick": round(self.done_window.rate(), 4),
+            "utilization": round(
+                self.active_group_ticks / max(self.group_tick_slots, 1), 4),
+            "mean_queue_depth": round(float(np.mean(self.queue_depths)), 2)
+            if self.queue_depths else 0.0,
+            "churn_per_kilotick": round(1000.0 * churn / wall, 2),
+            "latency": {
+                "mean": round(float(lats.mean()), 2) if lats.size else 0.0,
+                "p50": round(percentile(lats, 50), 1),
+                "p95": round(percentile(lats, 95), 1),
+                "p99": round(percentile(lats, 99), 1),
+                "max": round(float(lats.max()), 1) if lats.size else 0.0,
+            },
+            "groups": [s.as_dict() for s in snaps],
+        }
+        tenants = sorted({r.tenant for r in requests})
+        if len(tenants) > 1:
+            out["per_tenant"] = {}
+            for t in tenants:
+                tl = self.latencies(requests, tenant=t)
+                out["per_tenant"][t] = {
+                    "n": int(tl.size),
+                    "p50": round(percentile(tl, 50), 1),
+                    "p99": round(percentile(tl, 99), 1),
+                }
+        return out

@@ -1,0 +1,133 @@
+"""Trace-driven workloads for the fleet scheduler.
+
+The hand-rolled batches in ``benchmarks/mesh_amoeba.py`` exercise exactly
+one arrival pattern (everything submitted at tick 0).  Real serving load
+is a *process*: requests arrive over time, in bursts, from tenants with
+very different output-length profiles.  This module generates such traces
+as plain ``Request`` lists with ``arrival`` ticks set, so any engine that
+understands arrivals (the ``FleetEngine``) can replay them.
+
+Arrivals are per-tick Poisson draws; burstiness is an on/off modulation of
+the Poisson intensity (rate ``base`` off-burst, ``base * burst_factor``
+during the duty window of each period) — the standard Markov-modulated
+Poisson shape of interactive traffic.  Output lengths come from
+
+* ``bimodal``   — short chat turns + a long-generation tail (``p_long``),
+* ``lognormal`` — heavy right tail around ``mean_tokens``,
+* ``uniform``   — the near-lockstep control case.
+
+Prompt lengths are drawn from a small fixed set so the prefill compile
+cache stays bounded.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.serve.engine import Request
+
+
+@dataclass(frozen=True)
+class TenantProfile:
+    """One tenant's arrival process + output-length distribution."""
+    name: str
+    rate: float                        # mean arrivals per tick (off-burst)
+    length_dist: str = "bimodal"       # bimodal | lognormal | uniform
+    short_tokens: int = 4
+    long_tokens: int = 48
+    p_long: float = 0.2
+    mean_tokens: float = 12.0          # lognormal median / uniform center
+    sigma: float = 0.8                 # lognormal shape
+    min_tokens: int = 1
+    max_tokens: int = 256
+    prompt_lengths: Sequence[int] = (8, 16)
+    burst_factor: float = 1.0          # >1 turns on on/off modulation
+    burst_period: int = 64             # ticks per on/off cycle
+    burst_duty: float = 0.25           # fraction of the period at burst rate
+
+    def intensity(self, tick: int) -> float:
+        if self.burst_factor <= 1.0:
+            return self.rate
+        on = (tick % self.burst_period) < self.burst_duty * self.burst_period
+        return self.rate * (self.burst_factor if on else 1.0)
+
+    def sample_length(self, rng: np.random.Generator) -> int:
+        if self.length_dist == "bimodal":
+            n = self.long_tokens if rng.random() < self.p_long \
+                else self.short_tokens
+        elif self.length_dist == "lognormal":
+            n = int(round(float(
+                rng.lognormal(np.log(self.mean_tokens), self.sigma))))
+        elif self.length_dist == "uniform":
+            lo = max(self.min_tokens, int(self.mean_tokens * 0.5))
+            n = int(rng.integers(lo, int(self.mean_tokens * 1.5) + 1))
+        else:
+            raise ValueError(f"unknown length_dist {self.length_dist!r}")
+        return int(np.clip(n, self.min_tokens, self.max_tokens))
+
+
+def make_trace(profiles: Sequence[TenantProfile], horizon: int,
+               vocab_size: int, seed: int = 0,
+               max_requests: int = 10_000) -> List[Request]:
+    """Superpose the tenants' arrival processes over ``horizon`` ticks."""
+    rng = np.random.default_rng(seed)
+    out: List[Request] = []
+    for tick in range(horizon):
+        for prof in profiles:
+            for _ in range(int(rng.poisson(prof.intensity(tick)))):
+                plen = int(rng.choice(list(prof.prompt_lengths)))
+                prompt = list(map(int, rng.integers(0, vocab_size, plen)))
+                out.append(Request(
+                    rid=0, prompt=prompt,
+                    max_new_tokens=prof.sample_length(rng),
+                    tenant=prof.name, arrival=tick))
+    out.sort(key=lambda r: r.arrival)
+    for i, r in enumerate(out):
+        r.rid = i
+    if len(out) > max_requests:
+        warnings.warn(
+            f"trace truncated from {len(out)} to {max_requests} requests "
+            f"(raise max_requests to replay the full load)", stacklevel=2)
+        out = out[:max_requests]
+    return out
+
+
+# -- canned scenarios ----------------------------------------------------------
+
+def poisson_trace(rate: float, horizon: int, vocab_size: int,
+                  seed: int = 0, **length_kw) -> List[Request]:
+    """Single-tenant steady Poisson arrivals."""
+    prof = TenantProfile(name="steady", rate=rate, **length_kw)
+    return make_trace([prof], horizon, vocab_size, seed)
+
+
+def bursty_longtail_trace(horizon: int, vocab_size: int, seed: int = 0,
+                          chat_rate: float = 0.5,
+                          batch_rate: float = 0.08) -> List[Request]:
+    """The paper's adversarial serving regime as a multi-tenant mix.
+
+    An interactive chat tenant arrives in bursts with mostly-short turns
+    but a long tail, while a background batch tenant trickles in
+    long-generation jobs — so fused groups keep inheriting divergent
+    batches and queues build during bursts.
+    """
+    chat = TenantProfile(
+        name="chat", rate=chat_rate, length_dist="bimodal",
+        short_tokens=3, long_tokens=40, p_long=0.2,
+        burst_factor=4.0, burst_period=80, burst_duty=0.2)
+    batch = TenantProfile(
+        name="batch", rate=batch_rate, length_dist="lognormal",
+        mean_tokens=32.0, sigma=0.6, max_tokens=96,
+        prompt_lengths=(16,))
+    return make_trace([chat, batch], horizon, vocab_size, seed)
+
+
+def uniform_trace(rate: float, horizon: int, vocab_size: int,
+                  seed: int = 0, tokens: int = 12) -> List[Request]:
+    """Near-lockstep lengths — the regime where fused should win."""
+    prof = TenantProfile(name="uniform", rate=rate, length_dist="uniform",
+                         mean_tokens=float(tokens))
+    return make_trace([prof], horizon, vocab_size, seed)

@@ -1,3 +1,4 @@
-from repro.serve.engine import Request, ServeEngine, ServeStats
+from repro.serve.engine import (ReconfigurableGroup, Request, ServeEngine,
+                                ServeStats)
 
-__all__ = ["Request", "ServeEngine", "ServeStats"]
+__all__ = ["ReconfigurableGroup", "Request", "ServeEngine", "ServeStats"]

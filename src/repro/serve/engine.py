@@ -10,6 +10,12 @@ drain **independently** (the paper's SM split; ``warp_regroup`` sorts by
 remaining work first, ``direct_split`` cuts in arrival order).  Halves
 re-fuse when the divergence signal drops.
 
+The fused/split/re-fuse lifecycle of one pair lives in
+:class:`ReconfigurableGroup` — the unit the fleet scheduler
+(``repro.fleet``) replicates N times, the serving analogue of the paper's
+full chip of independently reconfigurable SM pairs.  :class:`ServeEngine`
+is the N=1 case and keeps the original public API.
+
 Costs are counted in slot-steps (decode slots x ticks — the hardware-time
 unit): a fused tick costs ``capacity``; two split halves tick concurrently
 for the same total.  Useful work is generated tokens, so
@@ -24,7 +30,7 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +49,10 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     generated: List[int] = field(default_factory=list)
+    # fleet metadata (defaults keep the original constructor signature)
+    tenant: str = "default"
+    arrival: int = 0                   # wall tick the request entered the system
+    finish: Optional[int] = None       # wall tick the last token was generated
 
     @property
     def remaining(self) -> int:
@@ -51,6 +61,10 @@ class Request:
     @property
     def done(self) -> bool:
         return self.remaining <= 0
+
+    @property
+    def latency(self) -> Optional[int]:
+        return None if self.finish is None else self.finish - self.arrival + 1
 
 
 @dataclass
@@ -82,29 +96,75 @@ class _Group:
         return np.array([r.remaining for r in self.requests], np.float64)
 
 
-class ServeEngine:
+def _group_done(g: Optional[_Group]) -> bool:
+    return g is None or all(r.done for r in g.requests)
+
+
+def make_decode_fn(model_cfg: ModelConfig, rt: T.Runtime) -> Callable:
+    """One jitted ``decode_step`` closure — the single place its jit options
+    live, shared by the N=1 engine, the fleet, and benchmark comparisons."""
+    return jax.jit(lambda p, s, t: T.decode_step(p, s, t, model_cfg, rt))
+
+
+# group step outcomes
+TICKED = "ticked"        # one decode wall-tick of progress
+RECONF = "reconfig"      # split or fuse happened; no decode this call
+IDLE = "idle"            # no live work and nothing admissible from the queue
+
+
+class ReconfigurableGroup:
+    """One reconfigurable pair: a fused group or two independent halves.
+
+    The serving analogue of one AMOEBA SM pair.  It owns its admission
+    queue, its :class:`AmoebaController` (split/fuse hysteresis + dwell),
+    its split state, and its :class:`ServeStats`.  ``mode`` selects the
+    hardware configuration the pair is allowed to take:
+
+    * ``"dynamic"`` — fused by default, splits/fuses on the divergence
+      signal (the paper's AMOEBA).
+    * ``"fused"``   — never splits (static fused baseline).
+    * ``"split"``   — permanently split into two halves (static split
+      baseline; the paper's scale-out-only configuration).
+
+    ``step`` advances the pair by at most one wall tick; the caller (the
+    N=1 :class:`ServeEngine` or the N-group ``repro.fleet.FleetEngine``)
+    owns the wall clock and passes it in as ``now`` so request completion
+    times are stamped consistently across groups.
+    """
+
     def __init__(self, model_cfg: ModelConfig, params,
                  rt: T.Runtime = T.Runtime(production=False, remat=False),
                  amoeba: AmoebaConfig = AmoebaConfig(),
-                 capacity: int = 8, window: int = 256):
+                 capacity: int = 8, window: int = 256,
+                 mode: str = "dynamic", gid: int = 0,
+                 decode_fn: Optional[Callable] = None):
+        if mode not in ("dynamic", "fused", "split"):
+            raise ValueError(f"unknown group mode {mode!r}")
+        if mode == "split" and capacity < 2:
+            raise ValueError("mode='split' needs capacity >= 2 "
+                             "(each half needs at least one decode slot)")
         self.cfg = model_cfg
         self.params = params
         self.rt = rt
         self.acfg = amoeba
         self.capacity = capacity
         self.window = window
+        self.mode = mode
+        self.gid = gid
         self.queue: collections.deque[Request] = collections.deque()
         self.stats = ServeStats()
         self.controller = AmoebaController(amoeba)
-        self._decode = jax.jit(
-            lambda p, s, t: T.decode_step(p, s, t, model_cfg, rt))
+        self._decode = decode_fn or make_decode_fn(model_cfg, rt)
+        self._fused: Optional[_Group] = None
+        self._halves: List[Optional[_Group]] = [None, None]
+        self._split_mode = (mode == "split")
 
     # -- admission -------------------------------------------------------------
 
     def submit(self, requests: Sequence[Request]) -> None:
         self.queue.extend(requests)
 
-    def _prefill_wave(self, n_slots: int) -> Optional[_Group]:
+    def _prefill_wave(self, n_slots: int, now: int) -> Optional[_Group]:
         """Admit up to n_slots queued requests: batch prefill per length."""
         wave: List[Request] = []
         while self.queue and len(wave) < n_slots:
@@ -122,6 +182,8 @@ class ServeEngine:
             nxt = jnp.argmax(logits, axis=-1)
             for r, t in zip(reqs, np.asarray(nxt)):
                 r.generated.append(int(t))
+                if r.done:
+                    r.finish = now
             self.stats.prefill_tokens += plen * len(reqs)
             self.stats.useful_tokens += len(reqs)
             states.append(st)
@@ -132,7 +194,7 @@ class ServeEngine:
 
     # -- decode ----------------------------------------------------------------
 
-    def _tick_group(self, g: _Group, slots: int) -> None:
+    def _tick_group(self, g: _Group, slots: int, now: int) -> None:
         """One decode step for every live request in the group."""
         live = [i for i, r in enumerate(g.requests) if not r.done]
         if not live:
@@ -144,6 +206,8 @@ class ServeEngine:
             if not r.done:
                 r.generated.append(int(arr[i]))
                 self.stats.useful_tokens += 1
+                if r.done:
+                    r.finish = now
         g.state = new_state
         g.last = nxt[:, None].astype(jnp.int32)
         self.stats.slot_steps += slots
@@ -156,68 +220,157 @@ class ServeEngine:
                                 jnp.take(g.last, jnp.asarray(ids), axis=0))
         return mk(fast), mk(slow)
 
+    def _credit(self, r: Request) -> None:
+        """Count a completion exactly once, even across resumed runs."""
+        if not getattr(r, "_credited", False):
+            r._credited = True
+            self.stats.completed += 1
+
+    def _retire(self, g: Optional[_Group]) -> None:
+        for r in (g.requests if g else []):
+            self._credit(r)
+
+    # -- introspection (used by the fleet router and telemetry) ----------------
+
+    @property
+    def is_split(self) -> bool:
+        return self._split_mode
+
+    def live_requests(self) -> List[Request]:
+        out: List[Request] = []
+        for g in ([self._fused] if self._fused else []) \
+                + [h for h in self._halves if h]:
+            out.extend(r for r in g.requests if not r.done)
+        return out
+
+    def load(self) -> float:
+        """Outstanding decode work: live remaining + queued budgets."""
+        return (sum(r.remaining for r in self.live_requests())
+                + sum(r.max_new_tokens for r in self.queue))
+
+    # -- one wall tick -----------------------------------------------------------
+
+    def step(self, dynamic: bool = True, now: int = 0) -> str:
+        """Advance the pair: admit, maybe reconfigure, maybe decode.
+
+        Returns ``TICKED`` after a decode step, ``RECONF`` after a
+        split/fuse (reconfiguration consumes the call but no decode
+        happens), ``IDLE`` when there is nothing to do.
+        """
+        if self.mode == "fused":
+            dynamic = False
+        if not self._split_mode:
+            if _group_done(self._fused):
+                self._retire(self._fused)
+                self._fused = self._prefill_wave(self.capacity, now)
+                if self._fused is None:
+                    return IDLE
+            fused = self._fused
+            div = divergence_score(fused.remaining)
+            want_split = (dynamic and self.acfg.enabled
+                          and self.controller.observe(div, fused.remaining)
+                          and len(fused.requests) >= 2)
+            if want_split:
+                a, b = self._split_group(fused)
+                self._halves = [a, b]
+                self._fused = None
+                self._split_mode = True
+                self.stats.splits += 1
+                return RECONF
+            self._tick_group(fused, self.capacity, now)
+            self.stats.ticks += 1
+            return TICKED
+        # split mode: each half admits new work independently the moment it
+        # drains; both halves tick concurrently (one wall tick)
+        for h in range(2):
+            if _group_done(self._halves[h]):
+                self._retire(self._halves[h])
+                self._halves[h] = self._prefill_wave(self.capacity // 2, now)
+        live = [h for h in self._halves if h is not None]
+        if not live:
+            return IDLE
+        if self.mode != "split":
+            rem = np.concatenate([h.remaining for h in live])
+            div = divergence_score(rem[rem > 0]) if (rem > 0).any() else 0.
+            if not self.controller.observe(div, rem):
+                # re-fuse: merge surviving requests into one group
+                self.stats.fuses += 1
+                self._fused = _Group(
+                    sum((h.requests for h in live), []),
+                    su.concat([h.state for h in live]),
+                    jnp.concatenate([h.last for h in live], axis=0))
+                self._halves = [None, None]
+                self._split_mode = False
+                return RECONF
+        for h in live:
+            self._tick_group(h, self.capacity // 2, now)
+        self.stats.ticks += 1
+        return TICKED
+
+    def finalize(self) -> None:
+        """Drain accounting: credit completion for done-but-unretired work.
+
+        Idempotent — groups persist on the engine, so a run may be
+        resumed after a ``max_ticks`` cutoff and finalized again.
+        """
+        for g in ([self._fused] if self._fused else []) \
+                + [h for h in self._halves if h]:
+            for r in g.requests:
+                if r.done:
+                    self._credit(r)
+
+
+class ServeEngine:
+    """The N=1 fleet: one reconfigurable pair behind the original API."""
+
+    def __init__(self, model_cfg: ModelConfig, params,
+                 rt: T.Runtime = T.Runtime(production=False, remat=False),
+                 amoeba: AmoebaConfig = AmoebaConfig(),
+                 capacity: int = 8, window: int = 256):
+        self.group = ReconfigurableGroup(
+            model_cfg, params, rt=rt, amoeba=amoeba,
+            capacity=capacity, window=window, mode="dynamic")
+        # aliases: the engine's queue/stats/controller ARE the group's
+        self.queue = self.group.queue
+        self.stats = self.group.stats
+        self.controller = self.group.controller
+
+    # the group owns all engine state; forward reads so there is one copy
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.group.cfg
+
+    @property
+    def params(self):
+        return self.group.params
+
+    @property
+    def rt(self) -> T.Runtime:
+        return self.group.rt
+
+    @property
+    def acfg(self) -> AmoebaConfig:
+        return self.group.acfg
+
+    @property
+    def capacity(self) -> int:
+        return self.group.capacity
+
+    @property
+    def window(self) -> int:
+        return self.group.window
+
+    # -- admission -------------------------------------------------------------
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        self.group.submit(requests)
+
     # -- main loop ----------------------------------------------------------------
 
     def run(self, dynamic: bool = True, max_ticks: int = 100_000) -> ServeStats:
         """Drain the queue.  ``dynamic=False`` = fused-only baseline."""
-        fused: Optional[_Group] = self._prefill_wave(self.capacity)
-        halves: List[Optional[_Group]] = [None, None]
-        split_mode = False
-
-        def group_done(g):
-            return g is None or all(r.done for r in g.requests)
-
         while self.stats.ticks < max_ticks:
-            if not split_mode:
-                if group_done(fused):
-                    for r in (fused.requests if fused else []):
-                        self.stats.completed += 1
-                    fused = self._prefill_wave(self.capacity)
-                    if fused is None:
-                        break
-                div = divergence_score(fused.remaining)
-                want_split = (dynamic and self.acfg.enabled
-                              and self.controller.observe(
-                                  div, fused.remaining)
-                              and len(fused.requests) >= 2)
-                if want_split:
-                    a, b = self._split_group(fused)
-                    halves = [a, b]
-                    fused = None
-                    split_mode = True
-                    self.stats.splits += 1
-                else:
-                    self._tick_group(fused, self.capacity)
-                    self.stats.ticks += 1
-            else:
-                # both halves tick concurrently (one wall tick); each half
-                # admits new work independently the moment it drains
-                for h in range(2):
-                    if group_done(halves[h]):
-                        for r in (halves[h].requests if halves[h] else []):
-                            self.stats.completed += 1
-                        halves[h] = self._prefill_wave(self.capacity // 2)
-                live = [h for h in halves if h is not None]
-                if not live:
-                    break
-                rem = np.concatenate([h.remaining for h in live])
-                div = divergence_score(rem[rem > 0]) if (rem > 0).any() else 0.
-                if not self.controller.observe(div, rem):
-                    # re-fuse: merge surviving requests into one group
-                    self.stats.fuses += 1
-                    fused = _Group(
-                        sum((h.requests for h in live), []),
-                        su.concat([h.state for h in live]),
-                        jnp.concatenate([h.last for h in live], axis=0))
-                    halves = [None, None]
-                    split_mode = False
-                    continue
-                for h in live:
-                    self._tick_group(h, self.capacity // 2)
-                self.stats.ticks += 1
-        # drain accounting
-        for g in ([fused] if fused else []) + [h for h in halves if h]:
-            for r in g.requests:
-                if r.done:
-                    self.stats.completed += 1
+            if self.group.step(dynamic=dynamic, now=self.stats.ticks) == IDLE:
+                break
+        self.group.finalize()
         return self.stats

@@ -73,7 +73,7 @@ g = jax.random.normal(jax.random.PRNGKey(3), (8, 16, 64), jnp.float32)
 def body(gl):
     mean, res = C.compressed_psum_mean({"g": gl}, "data")
     return mean["g"], res["g"]
-mean, res = jax.jit(jax.shard_map(
+mean, res = jax.jit(shardctx.shard_map(
     body, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
     check_vma=False))(g)
 # compare against the true mean over the data axis shards

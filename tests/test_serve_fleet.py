@@ -1,0 +1,181 @@
+"""Accounting invariants for ServeEngine and the fleet scheduler.
+
+Whatever the grouping policy does, the books must balance: every
+submitted request completes exactly once, every generated token is
+counted exactly once, and completion stamps are consistent with the wall
+clock.  These invariants pin the ReconfigurableGroup refactor and the
+FleetEngine on top of it.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import AmoebaConfig, FleetConfig
+from repro.fleet import (FleetEngine, ROUTERS, RollingWindow, TenantProfile,
+                         bursty_longtail_trace, make_trace)
+from repro.fleet.scheduler import route_length_aware
+from repro.fleet.telemetry import FleetTelemetry
+from repro.models import transformer as T
+from repro.serve import ReconfigurableGroup, Request, ServeEngine
+
+AMOEBA = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                      min_phase_steps=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-14b", reduced=True)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n=10, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(i, list(map(int, rng.integers(
+        0, cfg.vocab_size, int(rng.choice([8, 16]))))),
+        int(rng.choice([2, 5, 20]))) for i in range(n)]
+
+
+def _check_books(requests, useful_tokens, completed, prefill_tokens=None):
+    assert completed == len(requests)
+    assert all(r.done for r in requests)
+    assert useful_tokens == sum(len(r.generated) for r in requests)
+    assert all(len(r.generated) == r.max_new_tokens for r in requests)
+    if prefill_tokens is not None:
+        assert prefill_tokens == sum(len(r.prompt) for r in requests)
+    for r in requests:
+        assert r.finish is not None and r.finish >= r.arrival
+
+
+@pytest.mark.parametrize("dynamic", [False, True])
+@pytest.mark.parametrize("policy", ["direct_split", "warp_regroup"])
+def test_serve_engine_accounting(setup, dynamic, policy):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, capacity=4, amoeba=AmoebaConfig(
+        regroup_policy=policy, split_threshold=0.3, fuse_threshold=0.05,
+        min_phase_steps=2))
+    reqs = _requests(cfg)
+    eng.submit(reqs)
+    st = eng.run(dynamic=dynamic)
+    _check_books(reqs, st.useful_tokens, st.completed, st.prefill_tokens)
+    if not dynamic:
+        assert st.splits == 0 and st.fuses == 0
+
+
+@pytest.mark.parametrize("router", sorted(ROUTERS))
+def test_fleet_engine_accounting(setup, router):
+    cfg, params = setup
+    trace = bursty_longtail_trace(horizon=30, vocab_size=cfg.vocab_size,
+                                  seed=1)
+    eng = FleetEngine(cfg, params, fleet=FleetConfig(
+        num_groups=2, capacity=4, router=router, amoeba=AMOEBA))
+    eng.submit(trace)
+    s = eng.run()
+    _check_books(trace, eng.useful_tokens, eng.completed)
+    assert s["completed"] == len(trace) == s["submitted"]
+    assert s["wall_ticks"] >= max(r.finish for r in trace)
+
+
+def test_fleet_modes_generate_identical_tokens(setup):
+    """Fleet topology must never change per-request results — only cost."""
+    cfg, params = setup
+    texts = {}
+    for mode in ("fused", "split", "dynamic"):
+        trace = bursty_longtail_trace(horizon=25, vocab_size=cfg.vocab_size,
+                                      seed=2)
+        eng = FleetEngine(cfg, params, fleet=FleetConfig(
+            num_groups=2, capacity=4, mode=mode, amoeba=AMOEBA))
+        eng.submit(trace)
+        eng.run()
+        texts[mode] = {r.rid: tuple(r.generated) for r in trace}
+    assert texts["fused"] == texts["split"] == texts["dynamic"]
+
+
+# -- pure components (no model) ------------------------------------------------
+
+def test_traffic_trace_shape():
+    trace = bursty_longtail_trace(horizon=60, vocab_size=1000, seed=0)
+    assert trace, "bursty trace must be non-empty"
+    arrivals = [r.arrival for r in trace]
+    assert arrivals == sorted(arrivals)
+    assert len({r.rid for r in trace}) == len(trace)
+    assert {r.tenant for r in trace} == {"chat", "batch"}
+    assert all(1 <= r.max_new_tokens <= 256 for r in trace)
+    assert all(len(r.prompt) in (8, 16) for r in trace)
+
+
+def test_traffic_burst_modulation():
+    prof = TenantProfile(name="b", rate=1.0, burst_factor=4.0,
+                         burst_period=10, burst_duty=0.3)
+    on = [prof.intensity(t) for t in range(10)]
+    assert max(on) == 4.0 and min(on) == 1.0
+
+
+def test_make_trace_deterministic():
+    a = make_trace([TenantProfile(name="x", rate=0.5)], 40, 100, seed=7)
+    b = make_trace([TenantProfile(name="x", rate=0.5)], 40, 100, seed=7)
+    assert [(r.arrival, r.prompt, r.max_new_tokens) for r in a] \
+        == [(r.arrival, r.prompt, r.max_new_tokens) for r in b]
+
+
+def test_resumed_run_does_not_double_count(setup):
+    """finalize() must be idempotent: a max_ticks cutoff + resume must not
+    credit the same completions twice."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, capacity=4, amoeba=AMOEBA)
+    reqs = _requests(cfg, n=6, seed=4)
+    eng.submit(reqs)
+    eng.run(dynamic=True, max_ticks=3)     # cut off mid-drain, finalizes
+    st = eng.run(dynamic=True)             # resume to completion
+    _check_books(reqs, st.useful_tokens, st.completed, st.prefill_tokens)
+
+
+def test_split_mode_rejects_capacity_below_two(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="capacity"):
+        ReconfigurableGroup(cfg, params, capacity=1, mode="split")
+
+
+def test_telemetry_idle_gap_consistency():
+    """Fast-forwarded idle ticks must show up in utilization/idle stats."""
+    class _Stats:
+        useful_tokens = 0
+        completed = 0
+
+    class _G:
+        stats = _Stats()
+        queue = ()
+
+    t = FleetTelemetry()
+    groups = [_G(), _G()]
+    t.on_tick(0, groups, ticked=2)
+    t.on_idle_gap(8, len(groups))
+    t.on_tick(9, groups, ticked=2)
+    assert t.wall_ticks == 10
+    assert t.idle_ticks == 8
+    assert t.group_tick_slots == 2 * 2 + 8 * 2
+    assert len(t.queue_depths) == 10
+
+
+def test_rolling_window_rate():
+    w = RollingWindow(window=10)
+    for t in range(20):
+        w.push(t, 3.0 * t)
+    assert abs(w.rate() - 3.0) < 1e-9
+
+
+def test_length_aware_router_prefers_split_groups():
+    class Fake:
+        def __init__(self, split, load):
+            self.is_split, self._load = split, load
+
+        def load(self):
+            return self._load
+
+    groups = [Fake(False, 0), Fake(True, 100), Fake(True, 50)]
+    state = {"long_threshold": 24}
+    long_req = Request(0, [1], 48)
+    short_req = Request(1, [1], 3)
+    assert route_length_aware(long_req, groups, state) == 2   # least-loaded split
+    assert route_length_aware(short_req, groups, state) == 0  # fused group
