@@ -1,8 +1,9 @@
-"""Fleet-scale AMOEBA benchmark: static configurations vs dynamic.
+"""Fleet-scale AMOEBA benchmark: static configurations, dynamic, policies.
 
-The chip-level translation of Fig 12: a ≥4-group serving fleet replays
-one bursty long-tail trace under the three chip configurations the paper
-compares —
+Two chip-level sweeps over one bursty long-tail trace, the serving
+translation of Fig 12:
+
+**Mode sweep** — the three chip configurations the paper compares:
 
 * ``static_fused``   — every pair permanently fused (big-SM-only chip),
 * ``static_split``   — every pair permanently split (small-SM-only chip),
@@ -10,12 +11,21 @@ compares —
   divergence signal, with length-aware routing onto the resulting
   heterogeneous mix.
 
-All three replay byte-identical traces (same seed) and share one compiled
+**Policy sweep** — all-dynamic fleets differing only in the
+``repro.control`` decision stack:
+
+* ``threshold`` — fixed-ratio hysteresis (the paper's Fig 10/11 rule),
+* ``predictor`` — §4.1.3's logistic model over live telemetry,
+* ``online``    — predictor with periodic refits from the replay buffer,
+* ``oracle``    — true slot-cost argmax: the upper bound.
+
+All runs replay byte-identical traces (same seed) and share one compiled
 decode, so differences are purely scheduling.  Results (slot-step
 efficiency, p50/p95/p99 request latency, throughput, churn, utilization)
 go to ``BENCH_fleet.json`` at the repo root.
 
     PYTHONPATH=src python -m benchmarks.run fleet
+    PYTHONPATH=src python benchmarks/fleet_bench.py --quick   # CI smoke
 """
 from __future__ import annotations
 
@@ -28,30 +38,60 @@ OUT = os.path.join(ROOT, "BENCH_fleet.json")
 
 
 def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
-                seed: int = 0) -> Dict:
+                seed: int = 0, out_path: str = OUT) -> Dict:
     import jax
 
     from repro.configs import get_config
     from repro.configs.base import AmoebaConfig
-    from repro.fleet import bursty_longtail_trace, replay_modes
+    from repro.control import train_serve_predictor
+    from repro.fleet import (bursty_longtail_trace, replay_modes,
+                             replay_policies)
     from repro.models import transformer as T
 
     cfg = get_config("qwen3-14b", reduced=True)
     params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
     rt = T.Runtime(production=False, remat=False)
+    amoeba = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                          min_phase_steps=2)
+    trace_factory = lambda: bursty_longtail_trace(
+        horizon=horizon, vocab_size=cfg.vocab_size, seed=seed)
 
+    # the policy sweep runs the full k-way topology ladder (1x8/2x4/4x2
+    # for capacity 8) — the learned policies' edge over the fixed-ratio
+    # rule comes precisely from knowing when the deeper splits pay
+    ladder = amoeba.replace(max_ways=4 if capacity >= 4 else 2)
     out: Dict = {"config": {"groups": groups, "capacity": capacity,
                             "horizon": horizon, "seed": seed,
-                            "trace": "bursty_longtail"}}
-    out.update(replay_modes(
-        cfg, params, rt,
-        lambda: bursty_longtail_trace(horizon=horizon,
-                                      vocab_size=cfg.vocab_size, seed=seed),
-        groups=groups, capacity=capacity,
-        amoeba=AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
-                            min_phase_steps=2)))
+                            "trace": "bursty_longtail",
+                            "policy_sweep_max_ways": ladder.max_ways}}
+
+    print("== mode sweep (Fig 12 chip configurations) ==")
+    out.update(replay_modes(cfg, params, rt, trace_factory,
+                            groups=groups, capacity=capacity, amoeba=amoeba))
+
+    print("\n== policy sweep (repro.control decision stacks) ==")
+    model, minfo = train_serve_predictor(capacity=capacity,
+                                         max_ways=ladder.max_ways,
+                                         label_margin=ladder.label_margin)
+    pol = replay_policies(cfg, params, rt, trace_factory,
+                          groups=groups, capacity=capacity, amoeba=ladder,
+                          model=model)
+    out["policies"] = pol
+    # sibling key, not inside "policies": keeps that mapping homogeneous
+    # (one run summary per policy name) for downstream consumers
+    out["predictor_model"] = {
+        "train_accuracy": round(minfo["train_accuracy"], 4),
+        "n": minfo["n"],
+        "final_nll": round(minfo["final_nll"], 5),
+    }
 
     dyn, fus = out["amoeba_dynamic"], out["static_fused"]
+    thr = pol["threshold"]
+    learned = {n: pol[n] for n in ("predictor", "online") if n in pol}
+    best_learned = min(
+        learned, key=lambda n: (learned[n]["latency"]["p99"],
+                                -learned[n]["efficiency"]))
+    bl = learned[best_learned]
     out["validation"] = {
         "p99_speedup_vs_fused": round(
             fus["latency"]["p99"] / max(dyn["latency"]["p99"], 1e-9), 3),
@@ -60,19 +100,50 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
         "dynamic_beats_fused": bool(
             dyn["latency"]["p99"] < fus["latency"]["p99"]
             and dyn["efficiency"] > fus["efficiency"]),
+        # policy sweep: a learned policy must beat the threshold rule on
+        # p99 latency or efficiency; the oracle is the upper bound
+        "best_learned_policy": best_learned,
+        "learned_p99_speedup_vs_threshold": round(
+            thr["latency"]["p99"] / max(bl["latency"]["p99"], 1e-9), 3),
+        "learned_efficiency_gain_vs_threshold": round(
+            bl["efficiency"] / max(thr["efficiency"], 1e-9), 3),
+        "learned_beats_threshold": bool(
+            bl["latency"]["p99"] < thr["latency"]["p99"]
+            or bl["efficiency"] > thr["efficiency"]),
+        "oracle_p99": pol["oracle"]["latency"]["p99"],
+        "oracle_efficiency": pol["oracle"]["efficiency"],
     }
     v = out["validation"]
     print(f"\nAMOEBA-dynamic vs static-fused: "
           f"p99 {v['p99_speedup_vs_fused']:.2f}x, "
           f"efficiency {v['efficiency_gain_vs_fused']:.2f}x, "
           f"wins both: {v['dynamic_beats_fused']}")
-    with open(OUT, "w") as f:
+    print(f"{best_learned} vs threshold: "
+          f"p99 {v['learned_p99_speedup_vs_threshold']:.2f}x, "
+          f"efficiency {v['learned_efficiency_gain_vs_threshold']:.2f}x, "
+          f"wins either: {v['learned_beats_threshold']} "
+          f"(oracle bound: p99={v['oracle_p99']:.1f}, "
+          f"eff={v['oracle_efficiency']:.3f})")
+    with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
-    print(f"wrote {os.path.abspath(OUT)}")
+    print(f"wrote {os.path.abspath(out_path)}")
     return out
 
 
 if __name__ == "__main__":
+    import argparse
     import sys
     sys.path.insert(0, os.path.join(ROOT, "src"))
-    fleet_bench()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--horizon", type=int, default=120)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small fleet, short trace")
+    args = ap.parse_args()
+    if args.quick:
+        args.groups, args.capacity, args.horizon = 2, 4, 40
+    fleet_bench(groups=args.groups, capacity=args.capacity,
+                horizon=args.horizon, seed=args.seed, out_path=args.out)

@@ -1,0 +1,91 @@
+"""Control-plane demo: one policy stack from the simulator to the fleet.
+
+Walks the two levels of the unified ``repro.control`` plane:
+
+1. **gpusim level** — build the paper's offline corpus (§4.1.3: run both
+   static configurations, label with the winner), train the logistic
+   scalability predictor, and drive the simulator's per-kernel fuse
+   decision through the shared ``PredictorPolicy`` — reporting its
+   accuracy against the run-both ``OraclePolicy``.
+
+2. **fleet level** — serve a bursty long-tail trace under
+   ``OnlinePolicy``: the fleet starts on the threshold rule, logs
+   (features, realized-win) samples into the telemetry replay buffer,
+   refits its logistic model mid-run, and finishes predictor-in-the-loop.
+
+    PYTHONPATH=src python examples/control_plane.py --horizon 80
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--capacity", type=int, default=8)
+    ap.add_argument("--horizon", type=int, default=80)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--variants", type=int, default=4,
+                    help="gpusim corpus variants per workload")
+    ap.add_argument("--arch", default="qwen3-14b")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import AmoebaConfig, FleetConfig
+    from repro.control import PredictorPolicy
+    from repro.core.gpusim import WORKLOADS, profile_features
+    from repro.core.gpusim.corpus import train_sim_predictor
+    from repro.core.gpusim.sim import run_benchmark
+    from repro.fleet import FleetEngine, bursty_longtail_trace
+    from repro.models import transformer as T
+
+    # -- level 1: the paper's offline predictor drives the simulator --------
+    print("== gpusim: offline corpus -> logistic predictor ==")
+    model, info = train_sim_predictor(variants_per_workload=args.variants,
+                                      seed=args.seed, epochs=24)
+    print(f"corpus n={info['n']}  train_acc={info['train_accuracy']:.3f}  "
+          f"base-profile acc={info['base_profile_accuracy']:.3f}")
+    policy = PredictorPolicy(model=model, positive_means_split=False)
+    agree = 0
+    for name, w in WORKLOADS.items():
+        fused = policy.choose_static(profile_features(w))
+        a = run_benchmark(w, "baseline", epochs=24)
+        b = run_benchmark(w, "scale_up", epochs=24)
+        agree += fused == (b.ipc > a.ipc)
+        print(f"  {name:4s} predictor says {'fuse ' if fused else 'split'} "
+              f"(oracle: {'fuse' if b.ipc > a.ipc else 'split'})")
+    print(f"predictor/oracle agreement: {agree}/{len(WORKLOADS)}")
+
+    # -- level 2: the same stack, online, in the serving fleet --------------
+    print("\n== fleet: bursty long-tail trace under OnlinePolicy ==")
+    cfg = get_config(args.arch, reduced=True)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    trace = bursty_longtail_trace(horizon=args.horizon,
+                                  vocab_size=cfg.vocab_size, seed=args.seed)
+    eng = FleetEngine(cfg, params, fleet=FleetConfig(
+        num_groups=args.groups, capacity=args.capacity,
+        router="length_aware", mode="dynamic",
+        amoeba=AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                            min_phase_steps=2, policy="online",
+                            refit_every=48)))
+    eng.submit(trace)
+    s = eng.run()
+    lat, ctl = s["latency"], s["control"]
+    print(f"completed {s['completed']}/{s['submitted']}  "
+          f"eff={s['efficiency']:.3f}  p50={lat['p50']:.1f}  "
+          f"p99={lat['p99']:.1f}")
+    print(f"replay samples={ctl['replay_samples']}  "
+          f"refits={ctl.get('refits', 0)}")
+    if ctl.get("last_refit"):
+        lr = ctl["last_refit"]
+        print(f"last refit: n={lr['n']}  acc={lr['train_accuracy']:.3f}  "
+              f"nll tail={lr['loss_history_tail']}")
+
+
+if __name__ == "__main__":
+    main()

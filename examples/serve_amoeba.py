@@ -54,8 +54,8 @@ def main() -> None:
               f"eff={st.efficiency:.3f} splits={st.splits} "
               f"fuses={st.fuses} completed={st.completed}")
         if dyn and pol == "warp_regroup":
-            hist = eng.controller.split_state.history
-            timeline = "".join("S" if s else "." for _, s, _ in hist[:80])
+            hist = eng.controller.state.history
+            timeline = "".join("S" if w > 1 else "." for _, w, _ in hist[:80])
             print(f"  controller timeline: {timeline}")
     same = texts["fused_baseline"] == texts["warp_regroup"] \
         == texts["direct_split"]

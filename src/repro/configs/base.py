@@ -236,7 +236,14 @@ V5E = HardwareConfig()
 
 @dataclass(frozen=True)
 class AmoebaConfig:
-    """Paper §4: controller + split/fuse policy knobs."""
+    """Paper §4: controller + split/fuse policy knobs.
+
+    ``policy`` selects the repro.control decision stack: ``threshold``
+    (fixed-ratio hysteresis), ``predictor`` (logistic inference; needs
+    ``predictor_path`` or an injected model), ``oracle`` (true
+    slot-cost argmax — the upper bound), ``online`` (predictor with
+    periodic refits from the replay buffer).
+    """
     enabled: bool = True
     # fraction of divergent warps (mesh level: divergent requests / tokens)
     # above which a fused group splits — paper's fixed-ratio threshold.
@@ -247,6 +254,18 @@ class AmoebaConfig:
     min_phase_steps: int = 8
     regroup_policy: str = "warp_regroup"   # "direct_split" | "warp_regroup"
     predictor_path: Optional[str] = None   # trained coefficient file
+    # -- repro.control plane ------------------------------------------------
+    policy: str = "threshold"       # threshold | predictor | oracle | online
+    max_ways: int = 2               # topology ladder depth (1x8/2x4/4x2...)
+    min_gain: float = 0.0           # amortization floor for further splits
+    proba_band: float = 0.10        # predictor hysteresis band around 0.5
+    oracle_margin: float = 0.02     # oracle's required improvement to move
+    refit_every: int = 64           # online: decisions between refits
+    replay_capacity: int = 4096     # online: replay buffer size
+    label_margin: float = 0.02      # realized-win labeling threshold
+
+    def replace(self, **kw) -> "AmoebaConfig":
+        return dataclasses.replace(self, **kw)
 
 
 @dataclass(frozen=True)
@@ -265,6 +284,9 @@ class FleetConfig:
     mode: str = "dynamic"           # dynamic | fused | split
     long_threshold: int = 24        # length_aware: predicted-long cutoff
     telemetry_window: int = 256     # rolling-stat window, wall ticks
+    # chip-level FleetController: re-evaluate the fleet's split mix every
+    # N wall ticks (0 = no chip-wide rebalancing; groups act alone)
+    rebalance_every: int = 0
     amoeba: AmoebaConfig = AmoebaConfig()
 
     def replace(self, **kw) -> "FleetConfig":

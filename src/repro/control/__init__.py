@@ -1,0 +1,36 @@
+"""repro.control — the unified reconfiguration control plane.
+
+One policy stack drives every layer that reconfigures: the gpusim pair
+fabric, the serving groups, the fleet, and the trainer.  The paper's
+monitor -> predict -> reconfigure loop (§4.1, Fig 7) lives here once:
+
+* ``features``   — FeatureVector from live telemetry + the replay buffer.
+* ``space``      — ConfigSpace: k-way topologies (1x4 / 2x2 / 4x1) with
+                   amortization-checked transitions.
+* ``policies``   — ReconfigPolicy protocol: Threshold / Predictor /
+                   Oracle / Online implementations + the shared
+                   hysteresis primitive.
+* ``controller`` — GroupController (dwell + transition enforcement) and
+                   FleetController (chip-wide split-mix rebalancing).
+* ``offline``    — serve-level predictor training corpus.
+"""
+from repro.control.controller import (ControlState, FleetController,
+                                      GroupController)
+from repro.control.features import (SERVE_FEATURES, ArrivalRateTracker,
+                                    FeatureVector, ReplayBuffer)
+from repro.control.offline import build_serve_corpus, train_serve_predictor
+from repro.control.policies import (POLICY_NAMES, Decision, OnlinePolicy,
+                                    OraclePolicy, PredictorPolicy,
+                                    ReconfigPolicy, ThresholdPolicy,
+                                    hysteresis_toggle, make_policy)
+from repro.control.space import ConfigSpace, topology_name
+
+__all__ = [
+    "ControlState", "FleetController", "GroupController",
+    "SERVE_FEATURES", "ArrivalRateTracker", "FeatureVector", "ReplayBuffer",
+    "build_serve_corpus", "train_serve_predictor",
+    "POLICY_NAMES", "Decision", "OnlinePolicy", "OraclePolicy",
+    "PredictorPolicy", "ReconfigPolicy", "ThresholdPolicy",
+    "hysteresis_toggle", "make_policy",
+    "ConfigSpace", "topology_name",
+]

@@ -1,0 +1,202 @@
+"""Group- and chip-level reconfiguration controllers.
+
+:class:`GroupController` is the single split/fuse state machine in the
+codebase: it owns a topology (``ways``), enforces the dwell that
+amortizes reconfiguration cost, asks its
+:class:`~repro.control.policies.ReconfigPolicy` for a proposal each
+decision tick, and applies the
+:class:`~repro.control.space.ConfigSpace` amortization check before any
+transition.  Every consumer — the ``AmoebaController`` façade, the
+serving ``ReconfigurableGroup``, the trainer's straggler monitor — drives
+this one object.
+
+:class:`FleetController` is the paper's chip-wide view: 24 SM pairs each
+reconfigure independently, but the *mix* of fused and split pairs is a
+chip property.  It watches the fleet's long-request fraction and nudges
+individual group controllers (through the same dwell-checked transition
+path) so the number of split groups tracks the tail mass of the load.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.control.features import FeatureVector, ReplayBuffer
+from repro.control.policies import Decision, ReconfigPolicy, ThresholdPolicy
+from repro.control.space import ConfigSpace
+
+
+@dataclass
+class ControlState:
+    """The one copy of a group's reconfiguration state."""
+    ways: int = 1
+    steps_in_state: int = 0
+    step: int = 0
+    # (step, ways, divergence) per observe call — Fig 19's timeline
+    history: List[Tuple[int, int, float]] = field(default_factory=list)
+    # (step, from_ways, to_ways, gain, reason) per applied transition
+    transitions: List[Tuple[int, int, int, float, str]] = \
+        field(default_factory=list)
+
+    @property
+    def split(self) -> bool:
+        return self.ways > 1
+
+
+class GroupController:
+    """Dwell + policy + amortization check for one reconfigurable group."""
+
+    def __init__(self, policy: Optional[ReconfigPolicy] = None,
+                 space: Optional[ConfigSpace] = None,
+                 dwell: int = 8,
+                 replay: Optional[ReplayBuffer] = None,
+                 label_margin: float = 0.02,
+                 regroup_policy: str = "warp_regroup"):
+        self.policy = policy or ThresholdPolicy()
+        self.space = space or ConfigSpace(capacity=2, max_ways=2)
+        self.dwell = dwell
+        self.replay = replay
+        self.label_margin = label_margin
+        self.regroup_policy = regroup_policy
+        self.state = ControlState()
+        self._hint: Optional[int] = None
+
+    # -- fleet-level override ------------------------------------------------
+
+    def request_topology(self, ways: int) -> None:
+        """Chip-level hint: move toward ``ways`` when dwell next allows.
+
+        The hint flows through the same transition path as policy
+        proposals (one rung per decision tick, amortization-checked), so
+        a fleet rebalance can never bypass the group's own safeguards.
+        """
+        self._hint = ways if self.space.legal(ways) else None
+
+    # -- the decision tick ----------------------------------------------------
+
+    def _log_label(self, fv: FeatureVector) -> None:
+        if self.replay is None or fv.remaining is None \
+                or fv.remaining.size < 2:
+            return
+        _, gain = self.space.best_ways(fv.remaining, self.regroup_policy)
+        self.replay.add(fv.to_array(), 1.0 if gain > self.label_margin
+                        else 0.0)
+
+    def observe(self, fv: FeatureVector, max_ways_now: Optional[int] = None
+                ) -> int:
+        """Feed one decision tick's telemetry; returns the target topology.
+
+        ``max_ways_now`` caps how far the group may split *right now*
+        (e.g. a single-request batch cannot be partitioned) without
+        touching the configured space.
+        """
+        st = self.state
+        st.step += 1
+        st.steps_in_state += 1
+        self._log_label(fv)
+        if st.steps_in_state < self.dwell:
+            st.history.append((st.step, st.ways, fv.divergence))
+            return st.ways
+
+        d = self._proposal(fv)
+        target = d.ways
+        if max_ways_now is not None and target > st.ways:
+            target = min(target, max(max_ways_now, st.ways))
+        if target != st.ways and \
+                self.space.transition_ok(st.ways, target, d.gain):
+            st.transitions.append((st.step, st.ways, target, d.gain,
+                                   d.reason))
+            st.ways = target
+            st.steps_in_state = 0
+        # a fleet hint survives rejected attempts (capped by a momentary
+        # max_ways_now or an under-floor gain) and retires only once the
+        # group actually reaches the requested topology
+        if self._hint is not None and st.ways == self._hint:
+            self._hint = None
+        st.history.append((st.step, st.ways, fv.divergence))
+        return st.ways
+
+    def _proposal(self, fv: FeatureVector) -> Decision:
+        if self._hint is not None and self._hint != self.state.ways:
+            step = self.state.ways * 2 if self._hint > self.state.ways \
+                else self.state.ways // 2
+            gain = self.space.gain(fv.remaining, step,
+                                   self.regroup_policy) \
+                if fv.remaining is not None else fv.divergence
+            return Decision(step, gain=gain, reason="fleet rebalance")
+        return self.policy.decide(fv, self.state.ways)
+
+    def reset(self) -> None:
+        self.state = ControlState()
+        self._hint = None
+
+
+class FleetController:
+    """Chip-wide heterogeneity management across N group controllers.
+
+    The target number of split groups tracks the fraction of outstanding
+    *long* work (live + queued requests past ``long_threshold`` tokens),
+    re-evaluated every ``every`` wall ticks.  Groups are nudged — never
+    forced — via :meth:`GroupController.request_topology`; the per-group
+    dwell and amortization check still gate the actual move.
+    """
+
+    def __init__(self, long_threshold: int = 24, every: int = 16,
+                 min_split: int = 0, max_split: Optional[int] = None):
+        self.long_threshold = long_threshold
+        self.every = max(every, 1)
+        self.min_split = min_split
+        self.max_split = max_split
+        self.rebalances = 0
+
+    def desired_split_groups(self, long_frac: float, n_groups: int) -> int:
+        # round up: any long-tail mass deserves at least one split group
+        want = int(math.ceil(long_frac * n_groups - 1e-9)) \
+            if long_frac > 0 else 0
+        hi = self.max_split if self.max_split is not None else n_groups
+        return max(self.min_split, min(want, hi))
+
+    def rebalance(self, tick: int, groups: Sequence) -> int:
+        """Nudge the fleet's split mix; returns hints issued this call.
+
+        ``groups`` are serving groups exposing ``controller``
+        (a :class:`GroupController`), ``live_requests()``, ``queue`` and
+        ``load()`` — the :class:`repro.serve.engine.ReconfigurableGroup`
+        surface.
+        """
+        if tick % self.every != 0:
+            return 0
+        total, long_n = 0, 0
+        for g in groups:
+            for r in g.live_requests():
+                total += 1
+                long_n += r.remaining >= self.long_threshold
+            for r in g.queue:
+                total += 1
+                long_n += r.max_new_tokens >= self.long_threshold
+        if total == 0:
+            return 0
+        want = self.desired_split_groups(long_n / total, len(groups))
+        split = [g for g in groups if g.controller.state.split]
+        fused = [g for g in groups if not g.controller.state.split]
+        issued = 0
+        if len(split) < want:
+            # split the most divergent fused groups first
+            def div(g):
+                rem = np.asarray([r.remaining for r in g.live_requests()],
+                                 np.float64)
+                return 0.0 if rem.size == 0 or rem.max() <= 0 \
+                    else 1.0 - rem.mean() / rem.max()
+            for g in sorted(fused, key=div, reverse=True)[:want - len(split)]:
+                g.controller.request_topology(2)
+                issued += 1
+        elif len(split) > want:
+            # fuse the least-loaded split groups back
+            for g in sorted(split, key=lambda g: g.load())[:len(split) - want]:
+                g.controller.request_topology(1)
+                issued += 1
+        self.rebalances += issued > 0
+        return issued

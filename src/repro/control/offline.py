@@ -1,0 +1,68 @@
+"""Offline corpus for the serve-level scalability predictor.
+
+The paper trains its logistic model on "a large amount of offline
+experimental data" from the simulator (``repro.core.gpusim.corpus`` keeps
+that path).  The serving analogue generates decision scenarios — batches
+with bimodal / lognormal / near-lockstep remaining-length profiles under
+varying queue pressure — and labels each with the realized win: does the
+best k-way partition of this batch save more slot-steps than the
+reconfiguration margin?  The features are exactly the live-telemetry
+:class:`~repro.control.features.FeatureVector`, so a model trained here
+drops straight into :class:`~repro.control.policies.PredictorPolicy`.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.control.features import SERVE_FEATURES, FeatureVector
+from repro.control.space import ConfigSpace
+from repro.core import predictor as P
+
+
+def _sample_remaining(rng: np.random.Generator, n: int) -> np.ndarray:
+    kind = rng.choice(("bimodal", "lognormal", "uniform", "draining"))
+    if kind == "bimodal":
+        r = np.where(rng.random(n) < rng.uniform(0.1, 0.5),
+                     rng.integers(24, 200, n), rng.integers(1, 8, n))
+    elif kind == "lognormal":
+        r = np.ceil(rng.lognormal(np.log(12), rng.uniform(0.3, 1.2), n))
+    elif kind == "uniform":
+        c = rng.integers(4, 64)
+        r = rng.integers(max(c - 2, 1), c + 3, n)
+    else:  # draining: a fused batch where some rows already finished
+        r = rng.integers(1, 96, n).astype(np.float64)
+        r[rng.random(n) < rng.uniform(0.2, 0.7)] = 0.0
+    return np.asarray(r, np.float64)
+
+
+def build_serve_corpus(n_samples: int = 2048, capacity: int = 8,
+                       max_ways: int = 2, label_margin: float = 0.02,
+                       regroup_policy: str = "warp_regroup",
+                       seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (X (N, F), y (N,)) with y=1 iff splitting realizes a win."""
+    rng = np.random.default_rng(seed)
+    space = ConfigSpace(capacity=capacity, max_ways=max_ways)
+    X = np.zeros((n_samples, len(SERVE_FEATURES)))
+    y = np.zeros(n_samples)
+    for i in range(n_samples):
+        b = int(rng.integers(2, capacity + 1))
+        remaining = _sample_remaining(rng, b)
+        fv = FeatureVector.from_group(
+            remaining, queue_depth=int(rng.integers(0, 3 * capacity)),
+            arrival_rate=float(rng.uniform(0.0, 2.0)), capacity=capacity)
+        _, gain = space.best_ways(remaining, regroup_policy)
+        X[i] = fv.to_array()
+        y[i] = 1.0 if gain > label_margin else 0.0
+    return X, y
+
+
+def train_serve_predictor(n_samples: int = 2048, capacity: int = 8,
+                          max_ways: int = 2, label_margin: float = 0.02,
+                          regroup_policy: str = "warp_regroup",
+                          seed: int = 0, steps: int = 1500):
+    """Train the serve-level logistic model; returns (model, info)."""
+    X, y = build_serve_corpus(n_samples, capacity, max_ways, label_margin,
+                              regroup_policy, seed)
+    return P.train_logistic(X, y, feature_names=SERVE_FEATURES, steps=steps)

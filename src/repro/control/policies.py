@@ -1,0 +1,335 @@
+"""Reconfiguration policies: one decision stack for every layer.
+
+The paper's monitor -> predict -> reconfigure loop (§4.1, Fig 7) appears
+at three levels of this reproduction — the cycle-level simulator, the
+serving engine, and the trainer.  Each policy here answers the same
+question at a decision point: *given the telemetry, how many ways should
+this group be partitioned?*
+
+* :class:`ThresholdPolicy` — the paper's fixed-ratio hysteresis: split
+  past ``split_threshold`` when the regroup gain is positive, re-fuse
+  under ``fuse_threshold`` (Fig 10/11, lifted verbatim from the old
+  ``AmoebaController.observe``).
+* :class:`PredictorPolicy` — §4.1.3's logistic scalability model run
+  online over a feature vector ("a single MAC per feature").
+* :class:`OraclePolicy` — run-both-pick-better: scores every candidate
+  topology with a caller-supplied measure (the simulator's dual static
+  runs, or the true slot-cost of the live batch) and takes the argmax.
+* :class:`OnlinePolicy` — PredictorPolicy plus periodic refit from a
+  replay buffer of (features, realized-win) labels; bootstraps from the
+  threshold rule until the first fit.
+
+Policies are *advisory*: they propose a topology; the
+:class:`~repro.control.controller.GroupController` enforces dwell and the
+:class:`~repro.control.space.ConfigSpace` amortization check before any
+transition happens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+import numpy as np
+
+from repro.control.features import SERVE_FEATURES, FeatureVector, ReplayBuffer
+from repro.control.space import ConfigSpace
+from repro.core import predictor as P
+from repro.core.regroup import regroup_gain
+
+
+@dataclass
+class Decision:
+    """A proposed topology with the evidence behind it."""
+    ways: int
+    proba: float = 0.5            # P(more-split is better), when meaningful
+    gain: float = 0.0             # predicted relative slot-waste saving
+    reason: str = ""
+
+
+# -- the shared hysteresis primitive -----------------------------------------
+# Both the scalar serve/train path and the vectorized 24-pair simulator loop
+# are instances of this one rule, so it lives here and nowhere else.
+
+def hysteresis_toggle(is_split: np.ndarray, divergence: np.ndarray,
+                      split_threshold: float, fuse_threshold: float,
+                      want_split: np.ndarray, want_fuse: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """(split_now, fuse_now) masks under hysteresis (paper Fig 10/11).
+
+    Split when fused, divergent past the threshold, *and* the caller's
+    benefit estimate agrees; fuse when split and either calm below the
+    lower threshold or the estimate says fused is better again.
+    """
+    is_split = np.asarray(is_split, bool)
+    split_now = (~is_split) & (np.asarray(divergence) > split_threshold) \
+        & np.asarray(want_split, bool)
+    fuse_now = is_split & ((np.asarray(divergence) < fuse_threshold)
+                           | np.asarray(want_fuse, bool))
+    return split_now, fuse_now
+
+
+class ReconfigPolicy(Protocol):
+    """Protocol every policy implements."""
+    name: str
+
+    def decide(self, fv: FeatureVector, ways: int) -> Decision:
+        """Propose a topology given telemetry and the current topology."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# ThresholdPolicy — today's hysteresis + regroup-gain veto
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ThresholdPolicy:
+    """Fixed-ratio hysteresis with a regroup-gain veto on splits."""
+    split_threshold: float = 0.25
+    fuse_threshold: float = 0.10
+    regroup_policy: str = "warp_regroup"
+    name: str = "threshold"
+
+    def decide(self, fv: FeatureVector, ways: int) -> Decision:
+        split_now, fuse_now = hysteresis_toggle(
+            np.array(ways > 1), np.array(fv.divergence),
+            self.split_threshold, self.fuse_threshold,
+            want_split=np.array(True), want_fuse=np.array(False))
+        if bool(split_now):
+            gain = (regroup_gain(fv.remaining, self.regroup_policy)
+                    if fv.remaining is not None else fv.divergence)
+            if gain > 0.0:
+                return Decision(ways * 2, proba=1.0, gain=gain,
+                                reason=f"divergence {fv.divergence:.3f} > "
+                                       f"{self.split_threshold}")
+        elif bool(fuse_now):
+            return Decision(ways // 2, proba=0.0, gain=0.0,
+                            reason=f"divergence {fv.divergence:.3f} < "
+                                   f"{self.fuse_threshold}")
+        return Decision(ways, reason="hold")
+
+
+# ---------------------------------------------------------------------------
+# PredictorPolicy — logistic inference over live telemetry
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PredictorPolicy:
+    """§4.1.3's binary logistic model in the loop.
+
+    ``positive_means_split`` fixes the label convention: serve-level
+    corpora label 1 = "splitting wins", while the gpusim corpus labels
+    1 = "fused/scale-up wins" (the paper's convention).  ``proba_band``
+    is the hysteresis band around 0.5 that rate-limits topology flapping.
+    """
+    model: Optional[P.LogisticModel] = None
+    proba_band: float = 0.10
+    regroup_policy: str = "warp_regroup"
+    positive_means_split: bool = True
+    space: Optional[ConfigSpace] = None
+    name: str = "predictor"
+
+    @classmethod
+    def from_decider(cls, fuse_decider: Callable[[np.ndarray], bool]
+                     ) -> "PredictorPolicy":
+        """Wrap a bare features->fuse? callable (the gpusim interface)."""
+        pol = cls(model=None, positive_means_split=False)
+        pol._decider = fuse_decider
+        return pol
+
+    def proba_split(self, x: np.ndarray) -> float:
+        """P(the more-split configuration wins) under the model."""
+        decider = getattr(self, "_decider", None)
+        if decider is not None:
+            return 0.0 if bool(decider(np.asarray(x))) else 1.0
+        if self.model is None:
+            raise ValueError("PredictorPolicy needs a model or a decider")
+        p = float(P.predict_proba(self.model, np.asarray(x, np.float64)))
+        return p if self.positive_means_split else 1.0 - p
+
+    def choose_static(self, features: np.ndarray) -> bool:
+        """One-shot per-kernel choice: True = fuse (the gpusim path).
+
+        Fusing needs a strict majority — a 0.5 tie stays scale-out, the
+        paper's default configuration.
+        """
+        return self.proba_split(features) < 0.5
+
+    def decide(self, fv: FeatureVector, ways: int) -> Decision:
+        p = self.proba_split(fv.to_array())
+        if p > 0.5 + self.proba_band / 2:
+            # gain is the *true* predicted slot-waste saving so the
+            # ConfigSpace amortization floor still gates a confident but
+            # wrong model; model confidence only stands in when no live
+            # remaining lengths exist to score (computed in this branch
+            # only — hold/fuse ticks never consume it)
+            if fv.remaining is None:
+                gain = p - 0.5
+            elif self.space is not None:
+                gain = self.space.gain(fv.remaining, max(ways, 1) * 2,
+                                       self.regroup_policy)
+            else:
+                gain = regroup_gain(fv.remaining, self.regroup_policy)
+            return Decision(ways * 2, proba=p, gain=gain,
+                            reason=f"P(split)={p:.3f}")
+        if p < 0.5 - self.proba_band / 2 and ways > 1:
+            return Decision(ways // 2, proba=p, reason=f"P(split)={p:.3f}")
+        return Decision(ways, proba=p, reason="inside hysteresis band")
+
+
+# ---------------------------------------------------------------------------
+# OraclePolicy — run-both-pick-better
+# ---------------------------------------------------------------------------
+
+@dataclass
+class OraclePolicy:
+    """Score every candidate topology; move to the argmax.
+
+    ``score(ways, fv) -> utility`` is caller-supplied: the simulator
+    measures both static configurations' IPC (the label-generation path
+    that used to live inside ``gpusim.sim.run_benchmark``); the serving
+    engine defaults to the true relative slot-waste saving of the live
+    batch.  ``margin`` is the improvement a move must show over the
+    current topology's score — the oracle's hysteresis.
+    """
+    space: ConfigSpace = field(default_factory=lambda: ConfigSpace(2))
+    score: Optional[Callable[[int, Optional[FeatureVector]], float]] = None
+    margin: float = 0.02
+    regroup_policy: str = "warp_regroup"
+    name: str = "oracle"
+
+    def _score(self, ways: int, fv: Optional[FeatureVector]) -> float:
+        if self.score is not None:
+            return float(self.score(ways, fv))
+        if fv is None or fv.remaining is None:
+            return 0.0
+        return self.space.gain(fv.remaining, ways, self.regroup_policy)
+
+    def choose_static(self, features=None) -> bool:
+        """One-shot choice: True = fused (ways=1) scores strictly higher."""
+        return self._score(1, None) > self._score(2, None)
+
+    def decide(self, fv: FeatureVector, ways: int) -> Decision:
+        scores = {w: self._score(w, fv) for w in self.space.topologies()}
+        cur = scores.get(ways, 0.0)
+        top = max(scores.values())
+        # least-split topology whose score is within the margin of the best:
+        # splitting needs a strict win, fusing back is preferred on ties
+        # (it restores the wide configuration's coalescing for free)
+        target = min(w for w, s in scores.items() if s >= top - self.margin)
+        if target > ways and top > cur + self.margin:
+            step = ways * 2
+        elif target < ways:
+            step = ways // 2
+        else:
+            return Decision(ways, gain=cur, reason="oracle: hold")
+        gain = self.space.gain(fv.remaining, step, self.regroup_policy) \
+            if fv.remaining is not None else abs(top - cur)
+        return Decision(step, proba=1.0 if step > ways else 0.0, gain=gain,
+                        reason=f"oracle: {self.space.name(target)} scores "
+                               f"{scores[target]:.3f} vs {cur:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# OnlinePolicy — predictor + periodic refit from the replay buffer
+# ---------------------------------------------------------------------------
+
+@dataclass
+class OnlinePolicy:
+    """Logistic inference that retrains itself from realized outcomes.
+
+    Bootstraps from :class:`ThresholdPolicy` until the replay buffer has
+    ``min_samples`` with both labels present, then fits (and every
+    ``refit_every`` decisions refits) a logistic model via
+    ``predictor.train_logistic`` — whose per-epoch loss history is kept
+    in ``refit_info`` so convergence is observable.
+    """
+    replay: ReplayBuffer = field(default_factory=ReplayBuffer)
+    bootstrap: ThresholdPolicy = field(default_factory=ThresholdPolicy)
+    proba_band: float = 0.10
+    refit_every: int = 64
+    min_samples: int = 48
+    train_steps: int = 300
+    space: Optional[ConfigSpace] = None
+    name: str = "online"
+
+    def __post_init__(self):
+        self._inner = PredictorPolicy(
+            model=None, proba_band=self.proba_band,
+            regroup_policy=self.bootstrap.regroup_policy,
+            positive_means_split=True, space=self.space)
+        self._decisions = 0
+        self.refits = 0
+        self.refit_info: List[Dict] = []
+
+    @property
+    def fitted(self) -> bool:
+        return self._inner.model is not None
+
+    def maybe_refit(self) -> bool:
+        buf = self.replay
+        if len(buf) < self.min_samples:
+            return False
+        balance = buf.label_balance()
+        if balance <= 0.02 or balance >= 0.98:
+            return False                    # one-class buffer: nothing to fit
+        X, y = buf.dataset()
+        model, info = P.train_logistic(
+            X, y, feature_names=SERVE_FEATURES, steps=self.train_steps)
+        self._inner.model = model
+        self.refits += 1
+        self.refit_info.append({
+            "n": info["n"], "train_accuracy": info["train_accuracy"],
+            "final_nll": info["final_nll"],
+            "loss_history_tail": [round(float(v), 5)
+                                  for v in info["loss_history"][-5:]],
+        })
+        return True
+
+    def decide(self, fv: FeatureVector, ways: int) -> Decision:
+        self._decisions += 1
+        if (not self.fitted and len(self.replay) >= self.min_samples) \
+                or (self.refit_every and
+                    self._decisions % self.refit_every == 0):
+            self.maybe_refit()
+        if self.fitted:
+            d = self._inner.decide(fv, ways)
+            d.reason = f"online[{self.refits} fits] {d.reason}"
+            return d
+        d = self.bootstrap.decide(fv, ways)
+        d.reason = f"online[bootstrap] {d.reason}"
+        return d
+
+
+POLICY_NAMES = ("threshold", "predictor", "oracle", "online")
+
+
+def make_policy(name: str, *, space: ConfigSpace,
+                split_threshold: float = 0.25, fuse_threshold: float = 0.10,
+                regroup_policy: str = "warp_regroup",
+                model: Optional[P.LogisticModel] = None,
+                model_path: Optional[str] = None,
+                replay: Optional[ReplayBuffer] = None,
+                proba_band: float = 0.10, oracle_margin: float = 0.02,
+                refit_every: int = 64) -> ReconfigPolicy:
+    """Factory mapping ``AmoebaConfig.policy`` names onto policy objects."""
+    if name == "threshold":
+        return ThresholdPolicy(split_threshold, fuse_threshold,
+                               regroup_policy)
+    if name == "predictor":
+        if model is None and model_path:
+            model = P.load_model(model_path)
+        if model is None:
+            raise ValueError("policy='predictor' needs a trained model "
+                             "(AmoebaConfig.predictor_path or model=...)")
+        return PredictorPolicy(model=model, proba_band=proba_band,
+                               regroup_policy=regroup_policy, space=space)
+    if name == "oracle":
+        return OraclePolicy(space=space, margin=oracle_margin,
+                            regroup_policy=regroup_policy)
+    if name == "online":
+        return OnlinePolicy(
+            replay=replay if replay is not None else ReplayBuffer(),
+            bootstrap=ThresholdPolicy(split_threshold, fuse_threshold,
+                                      regroup_policy),
+            proba_band=proba_band, refit_every=refit_every, space=space)
+    raise ValueError(f"unknown policy {name!r}; have {POLICY_NAMES}")

@@ -1,0 +1,149 @@
+"""Configuration space: the k-way generalization of fused-vs-split.
+
+The paper's pair has two hardware states (one wide SM or two narrow
+halves).  A capacity-``C`` serving group generalizes this to a ladder of
+topologies ``1xC, 2x(C/2), 4x(C/4), ...`` — ``ways`` independent
+partitions of ``C/ways`` decode slots each, named like the chip
+configurations of Fig 12 (``1x4`` = fully fused, ``4x1`` = fully split).
+Transitions climb or descend one rung at a time (a split halves every
+partition, a fuse merges neighbors — the paper fuses *neighboring* SMs
+only) and must pass an amortization check: the predicted slot-waste
+saving has to repay the reconfiguration tick it costs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.regroup import POLICIES
+
+
+def topology_name(ways: int, capacity: int) -> str:
+    return f"{ways}x{max(capacity // ways, 1)}"
+
+
+@dataclass(frozen=True)
+class ConfigSpace:
+    """Legal topologies for one capacity-``C`` group and their transitions.
+
+    ``min_gain`` is the amortization floor: a transition is only legal
+    when its predicted relative slot-waste saving exceeds it (the serving
+    translation of ``fusion.amortized_switch_ok`` — a reconfiguration
+    consumes one wall tick of the group's decode budget, so a move that
+    saves less than ``min_gain`` of the fused cost never repays itself).
+    """
+    capacity: int
+    max_ways: int = 2
+    min_gain: float = 0.0
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if self.max_ways < 1:
+            raise ValueError("max_ways must be >= 1")
+
+    # -- topology enumeration ------------------------------------------------
+
+    def topologies(self) -> Tuple[int, ...]:
+        """Power-of-two ways with at least one slot per partition."""
+        out: List[int] = []
+        w = 1
+        while w <= self.max_ways and self.capacity // w >= 1:
+            out.append(w)
+            w *= 2
+        return tuple(out)
+
+    def name(self, ways: int) -> str:
+        return topology_name(ways, self.capacity)
+
+    def legal(self, ways: int) -> bool:
+        return ways in self.topologies()
+
+    def clamp(self, ways: int) -> int:
+        tops = self.topologies()
+        return max(w for w in tops if w <= max(ways, 1))
+
+    def neighbors(self, ways: int) -> Tuple[int, ...]:
+        """One-rung moves: fuse neighbors (ways/2) or split halves (ways*2)."""
+        return tuple(w for w in (ways // 2, ways * 2) if self.legal(w))
+
+    # -- cost model ----------------------------------------------------------
+
+    def slot_cost(self, remaining: Sequence[float], ways: int,
+                  policy: str = "warp_regroup") -> float:
+        """Predicted slot-steps to drain ``remaining`` under ``ways``.
+
+        Fused (ways=1) cost is ``C x max(remaining)`` — every slot runs
+        until the longest member finishes.  A k-way partition runs each
+        part for its own maximum on ``C/ways`` slots.
+        """
+        r = np.asarray(remaining, np.float64)
+        if r.size == 0 or r.max() <= 0:
+            return 0.0
+        slots = max(self.capacity // ways, 1)
+        parts = self.partition(list(range(r.size)), r, ways, policy)
+        return float(sum(slots * r[p].max() for p in parts if len(p)))
+
+    def gain(self, remaining: Sequence[float], ways: int,
+             policy: str = "warp_regroup") -> float:
+        """Relative slot-waste saving of ``ways`` vs fully fused, in [0, 1)."""
+        r = np.asarray(remaining, np.float64)
+        if r.size < 2 or r.max() <= 0 or ways <= 1:
+            return 0.0
+        fused = float(self.capacity * r.max())
+        return (fused - self.slot_cost(r, ways, policy)) / fused
+
+    def best_ways(self, remaining: Sequence[float],
+                  policy: str = "warp_regroup") -> Tuple[int, float]:
+        """(ways, gain) maximizing the predicted saving — the oracle's move."""
+        best, best_gain = 1, 0.0
+        for w in self.topologies():
+            g = self.gain(remaining, w, policy)
+            if g > best_gain + 1e-12:
+                best, best_gain = w, g
+        return best, best_gain
+
+    # -- transitions -----------------------------------------------------------
+
+    def transition_ok(self, cur: int, new: int, gain: float) -> bool:
+        """Amortization-checked legality of a ``cur -> new`` move.
+
+        Splitting further must predict at least ``min_gain`` of saving;
+        fusing back (new < cur) is always amortized — it frees no work
+        but restores the wide configuration's coalescing, and the
+        hysteresis band upstream already rate-limits it.
+        """
+        if not (self.legal(cur) and self.legal(new)) or new == cur:
+            return False
+        if new not in self.neighbors(cur):
+            return False
+        if new > cur:
+            return gain > self.min_gain
+        return True
+
+    def partition(self, indices: Sequence[int], remaining: Sequence[float],
+                  ways: int, policy: str = "warp_regroup"
+                  ) -> List[List[int]]:
+        """Split ``indices`` into ``ways`` equal parts under ``policy``.
+
+        ``ways=2`` reduces exactly to the paper's (fast, slow) pair from
+        :mod:`repro.core.regroup`; deeper ladders recurse: each half is
+        re-partitioned with the same policy, so ``warp_regroup`` yields
+        contiguous sorted chunks and ``direct_split`` arrival-order chunks.
+        """
+        idx = list(indices)
+        if ways <= 1 or len(idx) < 2:
+            return [idx] + [[] for _ in range(max(ways - 1, 0))]
+        r = np.asarray(remaining, np.float64)
+        fast, slow = POLICIES[policy](idx, r)
+        if ways == 2:
+            return [fast, slow]
+        sub = ways // 2
+        pos = {j: k for k, j in enumerate(idx)}
+        out = []
+        for half in (fast, slow):
+            rr = np.asarray([remaining[pos[j]] for j in half], np.float64)
+            out.extend(self.partition(half, rr, sub, policy))
+        return out

@@ -16,6 +16,15 @@ Two nested loops, exactly the paper's structure lifted to the mesh level:
 The controller is deliberately framework-level: it emits *decisions*
 (plan names, split layouts); the launcher/serving engine executes them
 (jit under the chosen mesh, reshard parameters, reorder batches).
+
+Since the ``repro.control`` refactor this class is a thin façade: loop 2
+(dynamic split/fuse) delegates to the shared
+:class:`repro.control.GroupController` driving a
+:class:`repro.control.ThresholdPolicy` — the same objects the serving
+engine, the fleet, and the gpusim consume — so there is exactly one copy
+of the hysteresis+dwell state machine in the codebase.  The public API
+(``choose_plan`` / ``observe`` / ``layout`` / ``split_state``) is
+unchanged.
 """
 from __future__ import annotations
 
@@ -25,9 +34,17 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from typing import TYPE_CHECKING
+
 from repro.configs.base import AmoebaConfig, HardwareConfig, V5E
 from repro.core import fusion, predictor, regroup
 from repro.core.metrics import StepProfile
+
+if TYPE_CHECKING:
+    # repro.control's policies import repro.core.predictor, so the runtime
+    # import of the control plane is deferred into __init__/observe to
+    # keep `import repro.core` acyclic
+    from repro.control import GroupController
 
 
 @dataclass
@@ -40,6 +57,7 @@ class PhaseDecision:
 
 @dataclass
 class SplitState:
+    """Read-only binary view of the shared ControlState (legacy API)."""
     split: bool = False
     steps_in_state: int = 0
     history: List[Tuple[int, bool, float]] = field(default_factory=list)
@@ -50,13 +68,28 @@ class AmoebaController:
 
     def __init__(self, cfg: AmoebaConfig = AmoebaConfig(),
                  model: Optional[predictor.LogisticModel] = None,
-                 hw: HardwareConfig = V5E):
+                 hw: HardwareConfig = V5E,
+                 group: Optional["GroupController"] = None):
+        from repro.control import (ConfigSpace, GroupController,
+                                   ThresholdPolicy)
         self.cfg = cfg
         self.model = model
         self.hw = hw
-        self.split_state = SplitState()
+        self.group = group or GroupController(
+            policy=ThresholdPolicy(cfg.split_threshold, cfg.fuse_threshold,
+                                   cfg.regroup_policy),
+            space=ConfigSpace(capacity=2, max_ways=2,
+                              min_gain=cfg.min_gain),
+            dwell=cfg.min_phase_steps,
+            regroup_policy=cfg.regroup_policy)
         self.decisions: List[PhaseDecision] = []
-        self._step = 0
+
+    @property
+    def split_state(self) -> SplitState:
+        st = self.group.state
+        return SplitState(
+            split=st.ways > 1, steps_in_state=st.steps_in_state,
+            history=[(s, w > 1, d) for s, w, d in st.history])
 
     # -- loop 1: per-phase plan selection ---------------------------------
 
@@ -114,33 +147,21 @@ class AmoebaController:
                 remaining: Optional[Sequence[float]] = None) -> bool:
         """Feed one step's divergence signal; returns current split state.
 
-        Implements Fig 10/11 with hysteresis + dwell: split when divergence
-        exceeds the threshold *and* the regroup policy predicts a win;
-        re-fuse when it drops below ``fuse_threshold`` (the slow half
-        drained).
+        Implements Fig 10/11 with hysteresis + dwell (via the shared
+        ``repro.control.GroupController``): split when divergence exceeds
+        the threshold *and* the regroup policy predicts a win; re-fuse
+        when it drops below ``fuse_threshold`` (the slow half drained).
         """
-        st = self.split_state
-        self._step += 1
-        st.steps_in_state += 1
-        if st.steps_in_state < self.cfg.min_phase_steps:
-            st.history.append((self._step, st.split, divergence))
-            return st.split
-
-        if not st.split and divergence > self.cfg.split_threshold:
-            gain = (regroup.regroup_gain(remaining, self.cfg.regroup_policy)
-                    if remaining is not None else divergence)
-            if gain > 0.0:
-                st.split = True
-                st.steps_in_state = 0
-        elif st.split and divergence < self.cfg.fuse_threshold:
-            st.split = False
-            st.steps_in_state = 0
-        st.history.append((self._step, st.split, divergence))
-        return st.split
+        from repro.control import FeatureVector
+        fv = FeatureVector(
+            divergence=float(divergence),
+            remaining=None if remaining is None
+            else np.asarray(remaining, np.float64))
+        return self.group.observe(fv) > 1
 
     def layout(self, indices: Sequence[int],
                remaining: Sequence[float]) -> Tuple[List[int], List[int]]:
         """Current batch layout: (fast, slow) under the active policy."""
-        if not self.split_state.split:
+        if self.group.state.ways <= 1:
             return list(indices), []
         return regroup.POLICIES[self.cfg.regroup_policy](indices, remaining)

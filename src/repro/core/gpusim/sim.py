@@ -38,6 +38,8 @@ from typing import Callable, Dict, Optional
 import numpy as np
 
 from repro.configs.paper_gpu import PAPER_GPU
+from repro.control import (ConfigSpace, OraclePolicy, PredictorPolicy,
+                           hysteresis_toggle)
 from repro.core.gpusim.workloads import WORKLOADS, Workload
 
 # -- machine constants (derived from Table 1) -------------------------------
@@ -269,8 +271,9 @@ def run_benchmark(w: Workload, scheme: str, *,
     """Simulate one kernel under one scheme.
 
     ``fuse_decider`` maps profile features -> fuse? (the trained logistic
-    predictor); None = oracle (run both static configs, pick the better —
-    used to *generate* predictor training labels).
+    predictor, wrapped in the shared ``repro.control.PredictorPolicy``);
+    None = the shared ``OraclePolicy`` (run both static configs, pick the
+    better — used to *generate* predictor training labels).
     """
     jitter = (np.arange(N_PAIRS) * 7) % w.div_period
     dws = scheme == "dws"
@@ -282,14 +285,19 @@ def run_benchmark(w: Workload, scheme: str, *,
         want_fused = False
     elif scheme == "scale_up":
         want_fused = True
-    else:  # static_fuse / direct_split / warp_regroup: predictor decides
+    else:  # static_fuse / direct_split / warp_regroup: a shared
+        # repro.control policy makes the per-kernel static choice
         feats = profile_features(w)
         if fuse_decider is not None:
-            want_fused = bool(fuse_decider(feats))
+            policy = PredictorPolicy.from_decider(fuse_decider)
         else:
-            a = run_benchmark(w, "baseline", epochs=epochs // 2)
-            b = run_benchmark(w, "scale_up", epochs=epochs // 2)
-            want_fused = b.ipc > a.ipc
+            # ways=1 is the fused pair (one wide SM), ways=2 the split pair
+            policy = OraclePolicy(
+                space=ConfigSpace(capacity=2, max_ways=2),
+                score=lambda ways, fv: run_benchmark(
+                    w, "scale_up" if ways == 1 else "baseline",
+                    epochs=epochs // 2).ipc)
+        want_fused = policy.choose_static(feats)
 
     st = np.full(N_PAIRS, FUSED if want_fused else SPLIT_BASE)
     trace = np.zeros((EPOCHS if epochs is None else epochs, N_PAIRS), np.int8)
@@ -304,7 +312,8 @@ def run_benchmark(w: Workload, scheme: str, *,
         d = d_all[t]
         toggled = np.zeros(N_PAIRS, bool)
         if dynamic and want_fused:
-            # Fig 10/11: per-pair independent split/fuse with hysteresis.
+            # Fig 10/11: per-pair independent split/fuse with hysteresis —
+            # the same repro.control primitive the serving engine runs.
             # §4.3: split only when "wide pipeline leads to a higher
             # performance degradation compared to the benefits from fusion" —
             # the switch controller estimates per-pair throughput in both
@@ -314,9 +323,10 @@ def run_benchmark(w: Workload, scheme: str, *,
                                    quarantine, dws, rho_prev)
             est_q = _pair_estimate(w, np.full(N_PAIRS, QSPLIT), d,
                                    quarantine, dws, rho_prev)
-            split_now = (st == FUSED) & (d > split_threshold) & (est_q > est_f)
-            fuse_now = (st == QSPLIT) & ((d < fuse_threshold)
-                                         | (est_f > est_q * 1.02))
+            split_now, fuse_now = hysteresis_toggle(
+                st == QSPLIT, d, split_threshold, fuse_threshold,
+                want_split=(st == FUSED) & (est_q > est_f),
+                want_fuse=est_f > est_q * 1.02)
             toggled = split_now | fuse_now
             st = np.where(split_now, QSPLIT, st)
             st = np.where(fuse_now, FUSED, st)

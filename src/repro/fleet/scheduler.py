@@ -1,14 +1,25 @@
-"""Fleet scheduler: N reconfigurable pairs behind a request router.
+"""Fleet scheduler: N reconfigurable groups behind a request router.
 
 This is the serving translation of the paper's full chip: AMOEBA's 24 SM
 pairs each fuse or split *independently*, so at any instant the chip is a
 heterogeneous mix of big fused SMs and nimble split halves.  Here each
 :class:`~repro.serve.engine.ReconfigurableGroup` is one pair (own
-controller, own admission queue, own split state) and the
+controller, own admission queue, own topology) and the
 :class:`FleetEngine` is the chip-level layer the single-pair
 ``ServeEngine`` could not express: a shared arrival stream, a routing
 policy that decides *which* pair absorbs each request, and a wall clock
 that ticks all pairs concurrently.
+
+Two control-plane layers from ``repro.control`` operate here:
+
+* every group's :class:`~repro.control.GroupController` runs the
+  fleet-wide reconfiguration policy (``FleetConfig.amoeba.policy``:
+  threshold / predictor / oracle / online) — one shared policy object, so
+  an ``online`` fleet learns from every group's replay samples at once;
+* an optional chip-level :class:`~repro.control.FleetController`
+  (``FleetConfig.rebalance_every > 0``) nudges the fused/split mix to
+  track the fleet's long-request fraction — the paper's chip-wide
+  heterogeneity as a managed quantity.
 
 Routing policies (pluggable via ``FleetConfig.router`` or the
 ``ROUTERS`` registry):
@@ -27,10 +38,13 @@ SMs share one instruction front-end.
 """
 from __future__ import annotations
 
-import collections
-from typing import Callable, Dict, List, Optional, Sequence
+import heapq
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import FleetConfig, ModelConfig
+from repro.control import ConfigSpace, FleetController, make_policy
+from repro.control.policies import ReconfigPolicy
+from repro.core.predictor import LogisticModel
 from repro.fleet.telemetry import FleetTelemetry
 from repro.models import transformer as T
 from repro.serve.engine import (IDLE, TICKED, ReconfigurableGroup, Request,
@@ -83,7 +97,9 @@ class FleetEngine:
     def __init__(self, model_cfg: ModelConfig, params,
                  rt: T.Runtime = T.Runtime(production=False, remat=False),
                  fleet: FleetConfig = FleetConfig(),
-                 decode_fn: Optional[Callable] = None):
+                 decode_fn: Optional[Callable] = None,
+                 model: Optional[LogisticModel] = None,
+                 policy: Optional[ReconfigPolicy] = None):
         if fleet.num_groups < 1:
             raise ValueError("fleet needs at least one group")
         if fleet.router not in ROUTERS:
@@ -96,34 +112,73 @@ class FleetEngine:
         # one compiled decode shared by every group (per batch shape);
         # callers comparing several fleets can pass one in to share it wider
         self._decode = decode_fn or make_decode_fn(model_cfg, rt)
+        # chip-wide control plane: one replay buffer and one policy object
+        # shared by every group, so online learning pools all samples
+        self.telemetry = FleetTelemetry(
+            fleet.telemetry_window,
+            replay_capacity=fleet.amoeba.replay_capacity)
+        acfg = fleet.amoeba
+        self.policy = policy
+        if self.policy is None and fleet.mode == "dynamic":
+            self.policy = make_policy(
+                acfg.policy,
+                space=ConfigSpace(capacity=fleet.capacity,
+                                  max_ways=acfg.max_ways,
+                                  min_gain=acfg.min_gain),
+                split_threshold=acfg.split_threshold,
+                fuse_threshold=acfg.fuse_threshold,
+                regroup_policy=acfg.regroup_policy,
+                model=model, model_path=acfg.predictor_path,
+                replay=self.telemetry.replay, proba_band=acfg.proba_band,
+                oracle_margin=acfg.oracle_margin,
+                refit_every=acfg.refit_every)
+        # only an online policy consumes the replay buffer; wiring it to
+        # every group would pay the per-tick labeling cost for nothing
+        grp_replay = getattr(self.policy, "replay", None)
         self.groups = [
             ReconfigurableGroup(
                 model_cfg, params, rt=rt, amoeba=fleet.amoeba,
                 capacity=fleet.capacity, window=fleet.window,
-                mode=fleet.mode, gid=i, decode_fn=self._decode)
+                mode=fleet.mode, gid=i, decode_fn=self._decode,
+                policy=self.policy, replay=grp_replay)
             for i in range(fleet.num_groups)]
         self._router = ROUTERS[fleet.router]
         self._router_state: Dict = {"long_threshold": fleet.long_threshold}
-        self.telemetry = FleetTelemetry(fleet.telemetry_window)
+        self.controller = FleetController(
+            long_threshold=fleet.long_threshold,
+            every=fleet.rebalance_every) if fleet.rebalance_every > 0 \
+            else None
         self.requests: List[Request] = []
-        self._pending: collections.deque[Request] = collections.deque()
+        # min-heap of (arrival, seq, request): O(log n) per submit, and the
+        # monotone seq keeps delivery FIFO-stable within an arrival tick
+        self._pending: List[Tuple[int, int, Request]] = []
+        self._seq = 0
+        self._last_delivered: Tuple[int, int] = (-1, -1)
         self.wall = 0
 
     # -- admission -------------------------------------------------------------
 
     def submit(self, requests: Sequence[Request]) -> None:
         """Queue requests for delivery at their ``arrival`` tick."""
-        self.requests.extend(requests)
-        merged = sorted(list(self._pending) + list(requests),
-                        key=lambda r: r.arrival)
-        self._pending = collections.deque(merged)
+        for r in requests:
+            self.requests.append(r)
+            self._seq += 1
+            heapq.heappush(self._pending, (r.arrival, self._seq, r))
 
     def _deliver(self) -> None:
-        while self._pending and self._pending[0].arrival <= self.wall:
-            r = self._pending.popleft()
+        while self._pending and self._pending[0][0] <= self.wall:
+            arrival, seq, r = heapq.heappop(self._pending)
+            # micro-invariant: within one arrival tick, delivery follows
+            # submission order (a late submission whose arrival already
+            # passed is delivered now and starts a fresh tick, so only
+            # equal-arrival pops are comparable)
+            if arrival == self._last_delivered[0]:
+                assert seq > self._last_delivered[1], \
+                    (arrival, seq, self._last_delivered)
+            self._last_delivered = (arrival, seq)
             r.arrival = max(r.arrival, 0)
             gi = self._router(r, self.groups, self._router_state)
-            self.groups[gi].submit([r])
+            self.groups[gi].submit([r], now=self.wall)
 
     # -- main loop ----------------------------------------------------------------
 
@@ -132,6 +187,9 @@ class FleetEngine:
         """Drive the fleet until the trace is fully drained (or max_ticks)."""
         while self.wall < max_ticks:
             self._deliver()
+            if self.controller is not None and dynamic \
+                    and self.fleet.mode == "dynamic":
+                self.controller.rebalance(self.wall, self.groups)
             statuses = [g.step(dynamic=dynamic, now=self.wall)
                         for g in self.groups]
             ticked = sum(s == TICKED for s in statuses)
@@ -141,7 +199,7 @@ class FleetEngine:
                     break
                 # fast-forward the idle gap to the next arrival, never
                 # past the caller's tick bound
-                nxt = min(max(self.wall + 1, self._pending[0].arrival),
+                nxt = min(max(self.wall + 1, self._pending[0][0]),
                           max_ticks)
                 self.telemetry.on_tick(self.wall, self.groups, 0,
                                        all_idle=True)
@@ -153,7 +211,9 @@ class FleetEngine:
             self.wall += 1
         for g in self.groups:
             g.finalize()
-        return self.telemetry.summary(self.groups, self.requests)
+        return self.telemetry.summary(self.groups, self.requests,
+                                      policy=self.policy,
+                                      fleet_controller=self.controller)
 
     # -- aggregates -------------------------------------------------------------
 
@@ -220,4 +280,54 @@ def replay_modes(model_cfg: ModelConfig, params, rt: T.Runtime,
                   f"p99={lat['p99']:5.1f} util={s['utilization']:.2f} "
                   f"churn/kt={s['churn_per_kilotick']:.0f} "
                   f"done={s['completed']}/{s['submitted']}")
+    return out
+
+
+def replay_policies(model_cfg: ModelConfig, params, rt: T.Runtime,
+                    trace_factory: Callable[[], Sequence[Request]], *,
+                    groups: int, capacity: int, amoeba=None,
+                    window: int = 256,
+                    policies: Sequence[str] = ("threshold", "predictor",
+                                               "oracle", "online"),
+                    model: Optional[LogisticModel] = None,
+                    router: str = "length_aware",
+                    verbose: bool = True) -> Dict[str, Dict]:
+    """Replay identical traces under several reconfiguration policies.
+
+    The policy-sweep companion of :func:`replay_modes`: every run is a
+    fully dynamic fleet; only the decision stack differs.  ``predictor``
+    needs a trained serve-level model (see
+    ``repro.control.offline.train_serve_predictor``); when ``model`` is
+    None it is trained on the fly from the synthetic corpus.
+    """
+    from repro.configs.base import AmoebaConfig
+    amoeba = amoeba or AmoebaConfig()
+    if model is None and "predictor" in policies:
+        from repro.control import train_serve_predictor
+        model, _ = train_serve_predictor(capacity=capacity,
+                                         max_ways=amoeba.max_ways,
+                                         label_margin=amoeba.label_margin,
+                                         regroup_policy=amoeba.regroup_policy)
+    decode = make_decode_fn(model_cfg, rt)
+    out: Dict[str, Dict] = {}
+    for name in policies:
+        trace = trace_factory()
+        eng = FleetEngine(
+            model_cfg, params, rt=rt, decode_fn=decode, model=model,
+            fleet=FleetConfig(num_groups=groups, capacity=capacity,
+                              router=router, mode="dynamic", window=window,
+                              amoeba=amoeba.replace(policy=name)))
+        eng.submit(trace)
+        s = eng.run()
+        if s["completed"] != len(trace):
+            raise RuntimeError(f"policy {name}: completed {s['completed']} "
+                               f"of {len(trace)} requests")
+        out[name] = s
+        if verbose:
+            lat = s["latency"]
+            print(f"policy={name:10s} ticks={s['wall_ticks']:4d} "
+                  f"eff={s['efficiency']:.3f} "
+                  f"p50={lat['p50']:5.1f} p95={lat['p95']:5.1f} "
+                  f"p99={lat['p99']:5.1f} "
+                  f"churn/kt={s['churn_per_kilotick']:.0f}")
     return out

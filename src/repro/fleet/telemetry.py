@@ -11,6 +11,12 @@ quantities the benchmarks compare:
 * throughput (tokens and requests per wall tick, plus a rolling window),
 * reconfiguration churn (splits+fuses per kilotick),
 * utilization (fraction of group-ticks that decoded).
+
+It also hosts the control plane's :class:`~repro.control.ReplayBuffer`:
+every group's ``GroupController`` logs one (features, realized-win)
+sample per decision tick into it, and an ``online`` policy refits its
+logistic model from the same buffer — telemetry is the training-data
+pipe of the monitor -> predict -> reconfigure loop.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.control import ReplayBuffer
 from repro.serve.engine import Request, ServeStats
 
 
@@ -73,7 +80,7 @@ def percentile(values: Sequence[float], q: float) -> float:
 class FleetTelemetry:
     """Collects tick samples during a run and summarizes at the end."""
 
-    def __init__(self, window: int = 256):
+    def __init__(self, window: int = 256, replay_capacity: int = 4096):
         self.window = window
         self.wall_ticks = 0
         self.idle_ticks = 0
@@ -82,6 +89,8 @@ class FleetTelemetry:
         self.tokens_window = RollingWindow(window)
         self.done_window = RollingWindow(window)
         self.queue_depths: List[int] = []
+        # (features, realized-win) decision log; see module docstring
+        self.replay = ReplayBuffer(maxlen=replay_capacity)
 
     # -- during the run --------------------------------------------------------
 
@@ -121,7 +130,8 @@ class FleetTelemetry:
                 and (tenant is None or r.tenant == tenant)]
         return np.asarray(lats, np.float64)
 
-    def summary(self, groups, requests: Sequence[Request]) -> Dict:
+    def summary(self, groups, requests: Sequence[Request],
+                policy=None, fleet_controller=None) -> Dict:
         snaps = [GroupSnapshot(
             gid=g.gid, mode=g.mode, is_split=g.is_split,
             queue_depth=len(g.queue), live=len(g.live_requests()),
@@ -158,6 +168,20 @@ class FleetTelemetry:
             },
             "groups": [s.as_dict() for s in snaps],
         }
+        control: Dict = {"replay_samples": len(self.replay)}
+        if self.replay:
+            control["replay_positive_frac"] = round(
+                self.replay.label_balance(), 3)
+        if policy is not None:
+            control["policy"] = getattr(policy, "name", str(policy))
+            refits = getattr(policy, "refits", None)
+            if refits is not None:
+                control["refits"] = refits
+                if getattr(policy, "refit_info", None):
+                    control["last_refit"] = policy.refit_info[-1]
+        if fleet_controller is not None:
+            control["fleet_rebalances"] = fleet_controller.rebalances
+        out["control"] = control
         tenants = sorted({r.tenant for r in requests})
         if len(tenants) > 1:
             out["per_tenant"] = {}

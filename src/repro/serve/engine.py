@@ -4,20 +4,24 @@ The engine drives real ``prefill``/``decode_step`` calls.  A *group* is the
 serving analogue of an SM: the fused group decodes its whole batch in
 lockstep, so every tick costs ``capacity`` slot-steps and the batch runs
 until its **longest** member finishes — the warp-waits-for-the-last-thread
-pathology.  The AMOEBA controller watches the remaining-length divergence
-and, past the threshold, splits the group into two halves that admit and
-drain **independently** (the paper's SM split; ``warp_regroup`` sorts by
-remaining work first, ``direct_split`` cuts in arrival order).  Halves
-re-fuse when the divergence signal drops.
+pathology.  The control plane (``repro.control``) watches the
+remaining-length divergence and, when its policy fires, partitions the
+group into independent parts that admit and drain on their own (the
+paper's SM split; ``warp_regroup`` sorts by remaining work first,
+``direct_split`` cuts in arrival order).  Parts re-fuse when the
+divergence signal drops.
 
-The fused/split/re-fuse lifecycle of one pair lives in
-:class:`ReconfigurableGroup` — the unit the fleet scheduler
-(``repro.fleet``) replicates N times, the serving analogue of the paper's
-full chip of independently reconfigurable SM pairs.  :class:`ServeEngine`
-is the N=1 case and keeps the original public API.
+Topologies generalize the paper's binary pair to a k-way ladder
+(``1x8 -> 2x4 -> 4x2`` for a capacity-8 group): each rung halves every
+partition.  The fused/split lifecycle decisions live in
+:class:`repro.control.GroupController` — this module only *executes*
+them (prefill waves, KV-state partitioning, decode ticks).
+:class:`ReconfigurableGroup` is the unit the fleet scheduler
+(``repro.fleet``) replicates N times; :class:`ServeEngine` is the N=1
+case and keeps the original public API.
 
 Costs are counted in slot-steps (decode slots x ticks — the hardware-time
-unit): a fused tick costs ``capacity``; two split halves tick concurrently
+unit): a fused tick costs ``capacity``; k split parts tick concurrently
 for the same total.  Useful work is generated tokens, so
 
     efficiency = useful tokens / slot-steps
@@ -30,15 +34,17 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import AmoebaConfig, ModelConfig
-from repro.core.controller import AmoebaController
-from repro.core.regroup import POLICIES, divergence_score
+from repro.control import (ArrivalRateTracker, ConfigSpace, FeatureVector,
+                           GroupController, ReplayBuffer, make_policy)
+from repro.control.policies import ReconfigPolicy
+from repro.core.predictor import LogisticModel
 from repro.models import transformer as T
 from repro.serve import state_utils as su
 
@@ -113,20 +119,23 @@ IDLE = "idle"            # no live work and nothing admissible from the queue
 
 
 class ReconfigurableGroup:
-    """One reconfigurable pair: a fused group or two independent halves.
+    """One reconfigurable group: ``ways`` independent partitions of
+    ``capacity // ways`` decode slots each.
 
-    The serving analogue of one AMOEBA SM pair.  It owns its admission
-    queue, its :class:`AmoebaController` (split/fuse hysteresis + dwell),
-    its split state, and its :class:`ServeStats`.  ``mode`` selects the
-    hardware configuration the pair is allowed to take:
+    The serving analogue of one AMOEBA SM pair, generalized to the k-way
+    topology ladder of :class:`repro.control.ConfigSpace`.  It owns its
+    admission queue, its :class:`repro.control.GroupController` (policy +
+    hysteresis + dwell + amortization check), its partitions, and its
+    :class:`ServeStats`.  ``mode`` selects the configurations the group
+    may take:
 
-    * ``"dynamic"`` — fused by default, splits/fuses on the divergence
-      signal (the paper's AMOEBA).
+    * ``"dynamic"`` — fused by default; the control-plane policy walks
+      the topology ladder on live telemetry (the paper's AMOEBA).
     * ``"fused"``   — never splits (static fused baseline).
-    * ``"split"``   — permanently split into two halves (static split
-      baseline; the paper's scale-out-only configuration).
+    * ``"split"``   — permanently two halves (static split baseline; the
+      paper's scale-out-only configuration).
 
-    ``step`` advances the pair by at most one wall tick; the caller (the
+    ``step`` advances the group by at most one wall tick; the caller (the
     N=1 :class:`ServeEngine` or the N-group ``repro.fleet.FleetEngine``)
     owns the wall clock and passes it in as ``now`` so request completion
     times are stamped consistently across groups.
@@ -137,7 +146,10 @@ class ReconfigurableGroup:
                  amoeba: AmoebaConfig = AmoebaConfig(),
                  capacity: int = 8, window: int = 256,
                  mode: str = "dynamic", gid: int = 0,
-                 decode_fn: Optional[Callable] = None):
+                 decode_fn: Optional[Callable] = None,
+                 policy: Optional[ReconfigPolicy] = None,
+                 model: Optional[LogisticModel] = None,
+                 replay: Optional[ReplayBuffer] = None):
         if mode not in ("dynamic", "fused", "split"):
             raise ValueError(f"unknown group mode {mode!r}")
         if mode == "split" and capacity < 2:
@@ -153,16 +165,45 @@ class ReconfigurableGroup:
         self.gid = gid
         self.queue: collections.deque[Request] = collections.deque()
         self.stats = ServeStats()
-        self.controller = AmoebaController(amoeba)
+        self.space = ConfigSpace(
+            capacity=capacity,
+            max_ways=amoeba.max_ways if mode == "dynamic" else 2,
+            min_gain=amoeba.min_gain)
+        if mode == "dynamic":
+            self._policy = policy or make_policy(
+                amoeba.policy, space=self.space,
+                split_threshold=amoeba.split_threshold,
+                fuse_threshold=amoeba.fuse_threshold,
+                regroup_policy=amoeba.regroup_policy,
+                model=model, model_path=amoeba.predictor_path,
+                replay=replay, proba_band=amoeba.proba_band,
+                oracle_margin=amoeba.oracle_margin,
+                refit_every=amoeba.refit_every)
+        else:
+            # static modes never consult the controller — don't build a
+            # policy (a predictor config would demand a model that a
+            # static baseline run has no use for)
+            self._policy = policy
+        # label logging costs a full topology-ladder evaluation per tick,
+        # so only wire a replay buffer when something consumes it: the
+        # caller's explicit buffer, or the policy's own (OnlinePolicy)
+        grp_replay = replay if replay is not None \
+            else getattr(self._policy, "replay", None)
+        self.controller = GroupController(
+            self._policy, self.space, dwell=amoeba.min_phase_steps,
+            replay=grp_replay, label_margin=amoeba.label_margin,
+            regroup_policy=amoeba.regroup_policy)
         self._decode = decode_fn or make_decode_fn(model_cfg, rt)
-        self._fused: Optional[_Group] = None
-        self._halves: List[Optional[_Group]] = [None, None]
-        self._split_mode = (mode == "split")
+        self._arrivals = ArrivalRateTracker()
+        # the current topology: one entry per partition (None = drained)
+        self._parts: List[Optional[_Group]] = \
+            [None, None] if mode == "split" else [None]
 
     # -- admission -------------------------------------------------------------
 
-    def submit(self, requests: Sequence[Request]) -> None:
+    def submit(self, requests: Sequence[Request], now: int = 0) -> None:
         self.queue.extend(requests)
+        self._arrivals.record(now, len(requests))
 
     def _prefill_wave(self, n_slots: int, now: int) -> Optional[_Group]:
         """Admit up to n_slots queued requests: batch prefill per length."""
@@ -212,14 +253,6 @@ class ReconfigurableGroup:
         g.last = nxt[:, None].astype(jnp.int32)
         self.stats.slot_steps += slots
 
-    def _split_group(self, g: _Group) -> Tuple[_Group, _Group]:
-        idx = list(range(len(g.requests)))
-        fast, slow = POLICIES[self.acfg.regroup_policy](idx, g.remaining)
-        mk = lambda ids: _Group([g.requests[i] for i in ids],
-                                su.take(g.state, ids),
-                                jnp.take(g.last, jnp.asarray(ids), axis=0))
-        return mk(fast), mk(slow)
-
     def _credit(self, r: Request) -> None:
         """Count a completion exactly once, even across resumed runs."""
         if not getattr(r, "_credited", False):
@@ -230,17 +263,59 @@ class ReconfigurableGroup:
         for r in (g.requests if g else []):
             self._credit(r)
 
+    # -- topology --------------------------------------------------------------
+
+    def _reconfigure(self, target: int) -> None:
+        """Merge all live partitions and re-partition into ``target`` parts.
+
+        Executes the controller's decision: the KV states of the live
+        parts are concatenated and re-sliced along the batch axis, so
+        reconfiguration never changes any request's results — only which
+        rows decode in lockstep.
+        """
+        live = [p for p in self._parts if p is not None]
+        if len(live) == 1:
+            merged = live[0]
+        else:
+            merged = _Group(
+                sum((p.requests for p in live), []),
+                su.concat([p.state for p in live]),
+                jnp.concatenate([p.last for p in live], axis=0))
+        if target > len(self._parts):
+            self.stats.splits += 1
+        else:
+            self.stats.fuses += 1
+        if target == 1:
+            self._parts = [merged]
+            return
+
+        def mk(ids: List[int]) -> Optional[_Group]:
+            if not ids:
+                return None
+            return _Group([merged.requests[i] for i in ids],
+                          su.take(merged.state, ids),
+                          jnp.take(merged.last, jnp.asarray(ids), axis=0))
+
+        parts_idx = self.space.partition(
+            list(range(len(merged.requests))), merged.remaining, target,
+            self.acfg.regroup_policy)
+        self._parts = [mk(ids) for ids in parts_idx]
+
     # -- introspection (used by the fleet router and telemetry) ----------------
 
     @property
+    def ways(self) -> int:
+        return len(self._parts)
+
+    @property
     def is_split(self) -> bool:
-        return self._split_mode
+        return len(self._parts) > 1
 
     def live_requests(self) -> List[Request]:
         out: List[Request] = []
-        for g in ([self._fused] if self._fused else []) \
-                + [h for h in self._halves if h]:
-            out.extend(r for r in g.requests if not r.done)
+        for g in self._parts:
+            if g is not None:
+                out.extend(r for r in g.requests if not r.done)
         return out
 
     def load(self) -> float:
@@ -251,59 +326,39 @@ class ReconfigurableGroup:
     # -- one wall tick -----------------------------------------------------------
 
     def step(self, dynamic: bool = True, now: int = 0) -> str:
-        """Advance the pair: admit, maybe reconfigure, maybe decode.
+        """Advance the group: admit, maybe reconfigure, maybe decode.
 
         Returns ``TICKED`` after a decode step, ``RECONF`` after a
-        split/fuse (reconfiguration consumes the call but no decode
+        topology change (reconfiguration consumes the call but no decode
         happens), ``IDLE`` when there is nothing to do.
         """
         if self.mode == "fused":
             dynamic = False
-        if not self._split_mode:
-            if _group_done(self._fused):
-                self._retire(self._fused)
-                self._fused = self._prefill_wave(self.capacity, now)
-                if self._fused is None:
-                    return IDLE
-            fused = self._fused
-            div = divergence_score(fused.remaining)
-            want_split = (dynamic and self.acfg.enabled
-                          and self.controller.observe(div, fused.remaining)
-                          and len(fused.requests) >= 2)
-            if want_split:
-                a, b = self._split_group(fused)
-                self._halves = [a, b]
-                self._fused = None
-                self._split_mode = True
-                self.stats.splits += 1
-                return RECONF
-            self._tick_group(fused, self.capacity, now)
-            self.stats.ticks += 1
-            return TICKED
-        # split mode: each half admits new work independently the moment it
-        # drains; both halves tick concurrently (one wall tick)
-        for h in range(2):
-            if _group_done(self._halves[h]):
-                self._retire(self._halves[h])
-                self._halves[h] = self._prefill_wave(self.capacity // 2, now)
-        live = [h for h in self._halves if h is not None]
+        ways = len(self._parts)
+        # each partition admits new work independently the moment it drains
+        for i, p in enumerate(self._parts):
+            if _group_done(p):
+                self._retire(p)
+                self._parts[i] = self._prefill_wave(self.capacity // ways,
+                                                    now)
+        live = [p for p in self._parts if p is not None]
         if not live:
             return IDLE
-        if self.mode != "split":
-            rem = np.concatenate([h.remaining for h in live])
-            div = divergence_score(rem[rem > 0]) if (rem > 0).any() else 0.
-            if not self.controller.observe(div, rem):
-                # re-fuse: merge surviving requests into one group
-                self.stats.fuses += 1
-                self._fused = _Group(
-                    sum((h.requests for h in live), []),
-                    su.concat([h.state for h in live]),
-                    jnp.concatenate([h.last for h in live], axis=0))
-                self._halves = [None, None]
-                self._split_mode = False
+        if self.mode == "dynamic" and dynamic and self.acfg.enabled:
+            rem = np.concatenate([p.remaining for p in live])
+            fv = FeatureVector.from_group(rem, len(self.queue),
+                                          self._arrivals.rate(now),
+                                          self.capacity)
+            # a group can only be partitioned as far as it has requests
+            cap = 1
+            while cap * 2 <= min(self.space.max_ways, rem.size):
+                cap *= 2
+            target = self.controller.observe(fv, max_ways_now=cap)
+            if target != ways:
+                self._reconfigure(target)
                 return RECONF
-        for h in live:
-            self._tick_group(h, self.capacity // 2, now)
+        for p in live:
+            self._tick_group(p, self.capacity // len(self._parts), now)
         self.stats.ticks += 1
         return TICKED
 
@@ -313,23 +368,27 @@ class ReconfigurableGroup:
         Idempotent — groups persist on the engine, so a run may be
         resumed after a ``max_ticks`` cutoff and finalized again.
         """
-        for g in ([self._fused] if self._fused else []) \
-                + [h for h in self._halves if h]:
+        for g in self._parts:
+            if g is None:
+                continue
             for r in g.requests:
                 if r.done:
                     self._credit(r)
 
 
 class ServeEngine:
-    """The N=1 fleet: one reconfigurable pair behind the original API."""
+    """The N=1 fleet: one reconfigurable group behind the original API."""
 
     def __init__(self, model_cfg: ModelConfig, params,
                  rt: T.Runtime = T.Runtime(production=False, remat=False),
                  amoeba: AmoebaConfig = AmoebaConfig(),
-                 capacity: int = 8, window: int = 256):
+                 capacity: int = 8, window: int = 256,
+                 policy: Optional[ReconfigPolicy] = None,
+                 model: Optional[LogisticModel] = None):
         self.group = ReconfigurableGroup(
             model_cfg, params, rt=rt, amoeba=amoeba,
-            capacity=capacity, window=window, mode="dynamic")
+            capacity=capacity, window=window, mode="dynamic",
+            policy=policy, model=model)
         # aliases: the engine's queue/stats/controller ARE the group's
         self.queue = self.group.queue
         self.stats = self.group.stats
@@ -363,7 +422,7 @@ class ServeEngine:
     # -- admission -------------------------------------------------------------
 
     def submit(self, requests: Sequence[Request]) -> None:
-        self.group.submit(requests)
+        self.group.submit(requests, now=self.stats.ticks)
 
     # -- main loop ----------------------------------------------------------------
 

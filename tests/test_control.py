@@ -1,0 +1,224 @@
+"""Unit + property tests for the repro.control plane.
+
+The controller invariants the refactor must pin:
+(a) hysteresis + dwell never toggles the split state in consecutive ticks,
+(b) every applied ConfigSpace transition passed the amortization check,
+(c) a saved/loaded predictor produces byte-identical decisions.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.base import AmoebaConfig
+from repro.control import (ConfigSpace, ControlState, FeatureVector,
+                           FleetController, GroupController, OnlinePolicy,
+                           OraclePolicy, PredictorPolicy, ReplayBuffer,
+                           ThresholdPolicy, build_serve_corpus, make_policy,
+                           train_serve_predictor)
+from repro.core import predictor as P
+from repro.core.controller import AmoebaController
+
+
+def fv_of(remaining, queue=0, rate=0.0, capacity=8):
+    return FeatureVector.from_group(np.asarray(remaining, np.float64),
+                                    queue, rate, capacity)
+
+
+# -- ConfigSpace ---------------------------------------------------------------
+
+def test_config_space_topologies_and_names():
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    assert sp.topologies() == (1, 2, 4)
+    assert [sp.name(w) for w in sp.topologies()] == ["1x8", "2x4", "4x2"]
+    assert ConfigSpace(capacity=4, max_ways=8).topologies() == (1, 2, 4)
+    assert ConfigSpace(capacity=2, max_ways=2).topologies() == (1, 2)
+
+
+def test_config_space_partition_reduces_to_regroup_pair():
+    from repro.core.regroup import POLICIES
+    sp = ConfigSpace(capacity=8, max_ways=2)
+    rem = [100.0, 5.0, 90.0, 3.0]
+    fast, slow = POLICIES["warp_regroup"](list(range(4)), rem)
+    assert sp.partition(list(range(4)), rem, 2) == [fast, slow]
+
+
+def test_config_space_deeper_split_never_costs_more():
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    rem = [100.0, 5.0, 90.0, 3.0, 80.0, 2.0, 70.0, 1.0]
+    assert sp.gain(rem, 4) >= sp.gain(rem, 2) >= 0.0
+
+
+def test_config_space_transition_legality():
+    sp = ConfigSpace(capacity=8, max_ways=4, min_gain=0.05)
+    assert sp.transition_ok(1, 2, gain=0.2)
+    assert not sp.transition_ok(1, 2, gain=0.01)      # under the floor
+    assert not sp.transition_ok(1, 4, gain=0.9)       # skips a rung
+    assert sp.transition_ok(4, 2, gain=0.0)           # fusing always amortizes
+    assert not sp.transition_ok(2, 2, gain=1.0)
+
+
+# -- policies ------------------------------------------------------------------
+
+def test_threshold_policy_matches_legacy_semantics():
+    pol = ThresholdPolicy(split_threshold=0.3, fuse_threshold=0.1)
+    hot = fv_of([100.0, 5.0, 90.0, 3.0])
+    assert pol.decide(hot, 1).ways == 2
+    calm = fv_of([5.0, 5.0, 5.0, 5.0])
+    assert pol.decide(calm, 1).ways == 1
+    assert pol.decide(calm, 2).ways == 1              # re-fuse under the band
+
+
+def test_oracle_policy_climbs_toward_best_topology():
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    pol = OraclePolicy(space=sp, margin=0.01)
+    divergent = fv_of([100.0, 5.0, 90.0, 3.0, 80.0, 2.0, 70.0, 1.0])
+    d = pol.decide(divergent, 1)
+    assert d.ways == 2                                # one rung per tick
+    assert pol.decide(divergent, 2).ways == 4
+    lockstep = fv_of([5.0, 5.0, 5.0, 5.0])
+    assert pol.decide(lockstep, 2).ways == 1
+
+
+def test_online_policy_bootstraps_then_refits():
+    buf = ReplayBuffer(maxlen=512)
+    pol = OnlinePolicy(replay=buf, refit_every=16, min_samples=32,
+                       train_steps=120)
+    assert not pol.fitted
+    X, y = build_serve_corpus(n_samples=64, seed=3)
+    for xi, yi in zip(X, y):
+        buf.add(xi, yi)
+    hot = fv_of([100.0, 5.0, 90.0, 3.0])
+    for _ in range(20):
+        pol.decide(hot, 1)
+    assert pol.fitted and pol.refits >= 1
+    assert pol.refit_info[-1]["train_accuracy"] > 0.8
+    assert len(pol.refit_info[-1]["loss_history_tail"]) == 5
+
+
+def test_make_policy_factory():
+    sp = ConfigSpace(capacity=8)
+    assert make_policy("threshold", space=sp).name == "threshold"
+    assert make_policy("oracle", space=sp).name == "oracle"
+    assert make_policy("online", space=sp).name == "online"
+    with pytest.raises(ValueError, match="predictor"):
+        make_policy("predictor", space=sp)
+    with pytest.raises(ValueError, match="unknown policy"):
+        make_policy("nope", space=sp)
+
+
+def test_train_logistic_returns_loss_history():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(200, 3))
+    y = (X[:, 0] > 0).astype(float)
+    _, info = P.train_logistic(X, y, steps=50)
+    hist = info["loss_history"]
+    assert isinstance(hist, list) and len(hist) == 50
+    assert hist[-1] < hist[0]
+    import json
+    json.dumps(hist)          # artifact-safe: plain floats, not ndarray
+
+
+# -- GroupController ----------------------------------------------------------
+
+def test_group_controller_dwell_blocks_early_moves():
+    gc = GroupController(ThresholdPolicy(0.3, 0.1), ConfigSpace(8, 2),
+                         dwell=3)
+    hot = fv_of([100.0, 5.0, 90.0, 3.0])
+    assert [gc.observe(hot) for _ in range(4)] == [1, 1, 2, 2]
+
+
+def test_group_controller_max_ways_now_caps_splitting():
+    gc = GroupController(ThresholdPolicy(0.3, 0.1), ConfigSpace(8, 2),
+                         dwell=1)
+    hot = fv_of([100.0, 2.0])
+    assert gc.observe(hot, max_ways_now=1) == 1       # can't split a loner
+    assert gc.observe(hot, max_ways_now=2) == 2
+
+
+def test_group_controller_hint_respects_dwell_and_space():
+    gc = GroupController(ThresholdPolicy(0.9, 0.0), ConfigSpace(8, 2),
+                         dwell=2)
+    calm = fv_of([50.0, 45.0, 48.0, 47.0])
+    gc.request_topology(2)
+    assert gc.observe(calm) == 1                      # dwell not yet served
+    assert gc.observe(calm) == 2                      # hint applied via space
+    assert gc.state.transitions[-1][4] == "fleet rebalance"
+
+
+def test_hint_survives_rejected_attempt():
+    """A fleet nudge capped by max_ways_now must retry, not vanish."""
+    gc = GroupController(ThresholdPolicy(0.9, 0.0), ConfigSpace(8, 2),
+                         dwell=1)
+    calm = fv_of([50.0, 45.0])
+    gc.request_topology(2)
+    assert gc.observe(calm, max_ways_now=1) == 1   # capped: hint retained
+    assert gc.observe(calm, max_ways_now=2) == 2   # applied next tick
+    assert gc._hint is None                        # retired once reached
+
+
+def test_facade_keeps_legacy_api():
+    cfg = AmoebaConfig(min_phase_steps=1, split_threshold=0.3,
+                       fuse_threshold=0.1)
+    ctl = AmoebaController(cfg)
+    lens = np.array([100.0, 5.0, 90.0, 3.0])
+    assert ctl.observe(0.5, lens) is True
+    st = ctl.split_state
+    assert st.split and len(st.history) == 1
+    assert st.history[0][1] is True
+    fast, slow = ctl.layout([0, 1, 2, 3], lens)
+    assert set(fast) == {1, 3} and set(slow) == {0, 2}
+
+
+# -- FleetController -----------------------------------------------------------
+
+def test_fleet_controller_targets_long_fraction():
+    fc = FleetController(long_threshold=24)
+    assert fc.desired_split_groups(0.0, 4) == 0
+    assert fc.desired_split_groups(0.5, 4) == 2
+    assert fc.desired_split_groups(1.0, 4) == 4
+
+
+def test_fleet_controller_nudges_groups():
+    class FakeReq:
+        def __init__(self, n):
+            self.remaining = n
+            self.max_new_tokens = n
+
+    class FakeGroup:
+        def __init__(self, live):
+            self.controller = GroupController(
+                ThresholdPolicy(0.99, 0.0), ConfigSpace(8, 2), dwell=1)
+            self._live = [FakeReq(n) for n in live]
+            self.queue = []
+
+        def live_requests(self):
+            return self._live
+
+        def load(self):
+            return sum(r.remaining for r in self._live)
+
+    groups = [FakeGroup([100, 2, 90, 3]), FakeGroup([5, 4, 6, 5])]
+    fc = FleetController(long_threshold=24, every=1)
+    issued = fc.rebalance(0, groups)
+    assert issued == 1
+    # the divergent group got the split hint, the lockstep one did not
+    assert groups[0].controller._hint == 2
+    assert groups[1].controller._hint is None
+
+
+# -- replay / labels -----------------------------------------------------------
+
+def test_group_controller_logs_realized_win_labels():
+    buf = ReplayBuffer()
+    gc = GroupController(ThresholdPolicy(0.3, 0.1), ConfigSpace(8, 2),
+                         dwell=2, replay=buf, label_margin=0.02)
+    gc.observe(fv_of([100.0, 5.0, 90.0, 3.0]))       # splitting clearly wins
+    gc.observe(fv_of([5.0, 5.0, 5.0, 5.0]))          # lockstep: no win
+    X, y = buf.dataset()
+    assert X.shape[0] == 2 and list(y) == [1.0, 0.0]
+
+
+def test_serve_predictor_learns_the_corpus():
+    model, info = train_serve_predictor(n_samples=512, steps=400, seed=0)
+    assert info["train_accuracy"] > 0.85

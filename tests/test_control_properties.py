@@ -1,0 +1,90 @@
+"""Hypothesis property tests for repro.control invariants.
+
+Split from test_control.py so the whole-module importorskip (the
+repo's established pattern, cf. test_properties.py) only skips the
+property suite where hypothesis is unavailable.
+"""
+import os
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.control import (ConfigSpace, FeatureVector, GroupController,
+                           OraclePolicy, PredictorPolicy, ThresholdPolicy,
+                           train_serve_predictor)
+from repro.core import predictor as P
+
+
+def fv_of(remaining, queue=0, rate=0.0, capacity=8):
+    return FeatureVector.from_group(np.asarray(remaining, np.float64),
+                                    queue, rate, capacity)
+
+
+divergences = st.lists(st.floats(min_value=0.0, max_value=0.95,
+                                 allow_nan=False),
+                       min_size=4, max_size=64)
+
+
+@given(divergences, st.integers(2, 6))
+@settings(max_examples=60, deadline=None)
+def test_hysteresis_dwell_never_toggles_consecutively(divs, dwell):
+    """(a) the dwell makes consecutive-tick topology changes impossible."""
+    gc = GroupController(ThresholdPolicy(0.3, 0.1), ConfigSpace(8, 2),
+                         dwell=dwell)
+    prev, prev_changed = 1, False
+    for d in divs:
+        ways = gc.observe(FeatureVector(divergence=d))
+        changed = ways != prev
+        assert not (changed and prev_changed), "toggled on consecutive ticks"
+        prev, prev_changed = ways, changed
+
+
+remaining_lists = st.lists(
+    st.floats(min_value=0.0, max_value=1e3, allow_nan=False),
+    min_size=2, max_size=16)
+
+
+@given(st.lists(remaining_lists, min_size=4, max_size=24),
+       st.sampled_from([2, 4]), st.floats(0.0, 0.2))
+@settings(max_examples=40, deadline=None)
+def test_transitions_always_pass_amortization(batches, max_ways, min_gain):
+    """(b) every applied transition satisfied the ConfigSpace check."""
+    space = ConfigSpace(capacity=8, max_ways=max_ways, min_gain=min_gain)
+    gc = GroupController(OraclePolicy(space=space, margin=0.01), space,
+                         dwell=1)
+    for rem in batches:
+        gc.observe(fv_of(rem))
+    for _step, frm, to, gain, _reason in gc.state.transitions:
+        assert to in space.neighbors(frm)
+        if to > frm:
+            assert gain > space.min_gain
+
+
+@pytest.fixture(scope="module")
+def saved_predictor(tmp_path_factory):
+    model, _ = train_serve_predictor(n_samples=256, steps=200, seed=1)
+    path = os.path.join(str(tmp_path_factory.mktemp("model")), "m.json")
+    P.save_model(model, path)
+    return model, P.load_model(path)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_predictor_roundtrip_identical_decisions(saved_predictor, seed):
+    """(c) save_model/load_model roundtrip preserves every decision."""
+    model, m2 = saved_predictor
+    a = PredictorPolicy(model=model, space=ConfigSpace(8, 2))
+    b = PredictorPolicy(model=m2, space=ConfigSpace(8, 2))
+    rng = np.random.default_rng(seed)
+    for _ in range(8):
+        rem = rng.integers(0, 120, rng.integers(2, 9)).astype(float)
+        fv = fv_of(rem, queue=int(rng.integers(0, 16)),
+                   rate=float(rng.uniform(0, 2)))
+        for ways in (1, 2):
+            da, db = a.decide(fv, ways), b.decide(fv, ways)
+            assert da.ways == db.ways
+            assert abs(da.proba - db.proba) < 1e-9

@@ -1,0 +1,36 @@
+"""Import-and-execute smoke tests for the demo scripts.
+
+Marked ``examples`` and excluded from the default tier-1 run (see
+``addopts`` in pyproject.toml); run them explicitly with
+
+    PYTHONPATH=src python -m pytest -q -m examples
+"""
+import os
+import runpy
+import sys
+
+import pytest
+
+EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
+
+pytestmark = pytest.mark.examples
+
+
+def _run(script: str, argv):
+    old = sys.argv
+    sys.argv = [script] + argv
+    try:
+        runpy.run_path(os.path.join(EXAMPLES, script), run_name="__main__")
+    finally:
+        sys.argv = old
+
+
+def test_control_plane_example_runs():
+    _run("control_plane.py",
+         ["--groups", "2", "--capacity", "4", "--horizon", "20",
+          "--variants", "1"])
+
+
+def test_serve_fleet_example_runs():
+    _run("serve_fleet.py", ["--groups", "2", "--capacity", "4",
+                            "--horizon", "20"])

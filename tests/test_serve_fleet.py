@@ -92,6 +92,118 @@ def test_fleet_modes_generate_identical_tokens(setup):
     assert texts["fused"] == texts["split"] == texts["dynamic"]
 
 
+# -- control-plane integration -------------------------------------------------
+
+def test_submit_heap_is_fifo_stable_for_equal_arrivals(setup):
+    """heapq submit must deliver same-tick requests in submission order."""
+    cfg, params = setup
+    eng = FleetEngine(cfg, params, fleet=FleetConfig(
+        num_groups=1, capacity=4, router="round_robin", amoeba=AMOEBA))
+    reqs = [Request(i, [1, 2, 3], 4, arrival=0) for i in range(6)]
+    eng.submit(reqs[:3])
+    eng.submit(reqs[3:])
+    eng._deliver()
+    assert [r.rid for r in eng.groups[0].queue] == list(range(6))
+
+
+def test_submit_heap_orders_interleaved_arrivals(setup):
+    cfg, params = setup
+    eng = FleetEngine(cfg, params, fleet=FleetConfig(
+        num_groups=1, capacity=4, router="round_robin", amoeba=AMOEBA))
+    eng.submit([Request(0, [1], 2, arrival=5), Request(1, [1], 2, arrival=0),
+                Request(2, [1], 2, arrival=5)])
+    eng.wall = 9
+    eng._deliver()
+    assert [r.rid for r in eng.groups[0].queue] == [1, 0, 2]
+
+
+def test_late_submission_of_past_arrival_delivers(setup):
+    """A request submitted after its arrival tick passed must be delivered
+    on the next delivery pass, not trip the FIFO micro-assert."""
+    cfg, params = setup
+    eng = FleetEngine(cfg, params, fleet=FleetConfig(
+        num_groups=1, capacity=4, router="round_robin", amoeba=AMOEBA))
+    eng.submit([Request(0, [1], 2, arrival=5)])
+    eng.wall = 5
+    eng._deliver()
+    eng.submit([Request(1, [1], 2, arrival=0)])
+    eng._deliver()
+    assert [r.rid for r in eng.groups[0].queue] == [0, 1]
+
+
+def test_static_modes_ignore_policy_config(setup):
+    """Static fused/split fleets never consult the controller, so a
+    predictor policy config without a model must not raise."""
+    cfg, params = setup
+    for mode in ("fused", "split"):
+        eng = FleetEngine(cfg, params, fleet=FleetConfig(
+            num_groups=1, capacity=4, mode=mode,
+            amoeba=AMOEBA.replace(policy="predictor")))
+        assert eng.policy is None
+
+
+@pytest.mark.parametrize("policy", ["oracle", "online", "predictor"])
+def test_fleet_policy_stacks_accounting(setup, policy):
+    """Every repro.control decision stack must keep the books balanced."""
+    from repro.control import train_serve_predictor
+    cfg, params = setup
+    model = None
+    if policy == "predictor":
+        model, _ = train_serve_predictor(n_samples=256, steps=150, seed=0)
+    trace = bursty_longtail_trace(horizon=25, vocab_size=cfg.vocab_size,
+                                  seed=3)
+    eng = FleetEngine(cfg, params, model=model, fleet=FleetConfig(
+        num_groups=2, capacity=4, router="length_aware",
+        amoeba=AMOEBA.replace(policy=policy)))
+    eng.submit(trace)
+    s = eng.run()
+    _check_books(trace, eng.useful_tokens, eng.completed)
+    assert s["control"]["policy"] == policy
+
+
+def test_kway_group_reaches_four_ways(setup):
+    """A capacity-8 group under heavy long-tail divergence climbs the
+    topology ladder past the paper's binary pair — and the books still
+    balance."""
+    from repro.serve.engine import RECONF
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    reqs = [Request(i, [1, 2, 3, 4, 5, 6, 7, 8],
+                    int(rng.choice([2, 12, 40, 90])))
+            for i in range(16)]
+    from repro.serve import ReconfigurableGroup
+    g = ReconfigurableGroup(cfg, params, capacity=8, mode="dynamic",
+                            amoeba=AMOEBA.replace(policy="oracle",
+                                                  max_ways=4,
+                                                  min_phase_steps=1))
+    g.submit(reqs)
+    max_ways_seen, ticks = 1, 0
+    while ticks < 2000:
+        status = g.step(dynamic=True, now=ticks)
+        if status == "idle":
+            break
+        max_ways_seen = max(max_ways_seen, g.ways)
+        ticks += 1
+    g.finalize()
+    assert max_ways_seen == 4
+    assert g.stats.completed == len(reqs)
+    assert all(r.done for r in reqs)
+    assert g.stats.useful_tokens == sum(len(r.generated) for r in reqs)
+
+
+def test_fleet_rebalancer_drains_and_reports(setup):
+    cfg, params = setup
+    trace = bursty_longtail_trace(horizon=25, vocab_size=cfg.vocab_size,
+                                  seed=4)
+    eng = FleetEngine(cfg, params, fleet=FleetConfig(
+        num_groups=2, capacity=4, router="length_aware",
+        rebalance_every=4, amoeba=AMOEBA))
+    eng.submit(trace)
+    s = eng.run()
+    _check_books(trace, eng.useful_tokens, eng.completed)
+    assert "fleet_rebalances" in s["control"]
+
+
 # -- pure components (no model) ------------------------------------------------
 
 def test_traffic_trace_shape():
