@@ -1,7 +1,6 @@
 """Fleet-scale AMOEBA benchmark: static configurations, dynamic, policies.
 
-Two chip-level sweeps over one bursty long-tail trace, the serving
-translation of Fig 12:
+Three chip-level sweeps, the serving translation of Fig 12:
 
 **Mode sweep** — the three chip configurations the paper compares:
 
@@ -19,10 +18,19 @@ translation of Fig 12:
 * ``online``    — predictor with periodic refits from the replay buffer,
 * ``oracle``    — true slot-cost argmax: the upper bound.
 
+**Composition sweep** — the heterogeneous-topology headline (§5,
+Fig 12): identical all-dynamic oracle fleets on a *skewed* long-tail
+trace, differing only in the topology space — the balanced equal-ways
+ladders (2-way, 4-way) vs the full composition lattice with per-part
+moves (``(5, 3)``-style cuts).  Validation records whether
+heterogeneous topologies beat the best equal ladder on p99 latency or
+slot efficiency, plus the compositions actually visited.
+
 All runs replay byte-identical traces (same seed) and share one compiled
 decode, so differences are purely scheduling.  Results (slot-step
-efficiency, p50/p95/p99 request latency, throughput, churn, utilization)
-go to ``BENCH_fleet.json`` at the repo root.
+efficiency, p50/p95/p99 request latency, throughput, churn, utilization,
+the Fig 20 per-feature ablation of the serve predictor) go to
+``BENCH_fleet.json`` at the repo root.
 
     PYTHONPATH=src python -m benchmarks.run fleet
     PYTHONPATH=src python benchmarks/fleet_bench.py --quick   # CI smoke
@@ -37,16 +45,75 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 OUT = os.path.join(ROOT, "BENCH_fleet.json")
 
 
+def composition_sweep(cfg, params, rt, decode, *, groups: int,
+                      capacity: int, horizon: int, seed: int) -> Dict:
+    """Equal-ways ladders vs the heterogeneous composition lattice.
+
+    Every run is an all-dynamic oracle fleet (the policy variable is
+    pinned to the upper bound so the only difference is the *topology
+    space*) replaying one skewed long-tail trace.
+    """
+    from repro.configs.base import AmoebaConfig, FleetConfig
+    from repro.fleet import FleetEngine, skewed_longtail_trace
+
+    base = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                        min_phase_steps=2, policy="oracle")
+    variants = {"equal_2way": base.replace(hetero=False, max_ways=2)}
+    if capacity >= 4:
+        variants["equal_4way"] = base.replace(hetero=False, max_ways=4)
+    variants["hetero"] = base.replace(hetero=True,
+                                      max_ways=min(capacity, 8))
+    out: Dict = {}
+    for label, amoeba in variants.items():
+        trace = skewed_longtail_trace(horizon=horizon,
+                                      vocab_size=cfg.vocab_size, seed=seed)
+        eng = FleetEngine(cfg, params, rt=rt, decode_fn=decode,
+                          fleet=FleetConfig(
+                              num_groups=groups, capacity=capacity,
+                              router="length_aware", mode="dynamic",
+                              amoeba=amoeba))
+        eng.submit(trace)
+        s = eng.run()
+        if s["completed"] != len(trace):
+            raise RuntimeError(f"{label}: completed {s['completed']} of "
+                               f"{len(trace)} requests")
+        out[label] = s
+        lat = s["latency"]
+        print(f"{label:12s} ticks={s['wall_ticks']:4d} "
+              f"eff={s['efficiency']:.3f} p50={lat['p50']:5.1f} "
+              f"p99={lat['p99']:5.1f} "
+              f"hetero_topos={s['control'].get('hetero_topologies_visited', 0)}")
+    equal = {k: v for k, v in out.items() if k.startswith("equal")}
+    best_equal = min(equal, key=lambda k: (equal[k]["latency"]["p99"],
+                                           -equal[k]["efficiency"]))
+    be, he = out[best_equal], out["hetero"]
+    out["validation"] = {
+        "best_equal_ladder": best_equal,
+        "hetero_p99_speedup_vs_equal": round(
+            be["latency"]["p99"] / max(he["latency"]["p99"], 1e-9), 3),
+        "hetero_efficiency_gain_vs_equal": round(
+            he["efficiency"] / max(be["efficiency"], 1e-9), 3),
+        "hetero_beats_equal": bool(
+            he["latency"]["p99"] < be["latency"]["p99"]
+            or he["efficiency"] > be["efficiency"]),
+        "hetero_topologies_visited": he["control"].get(
+            "topologies_visited", []),
+    }
+    return out
+
+
 def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
                 seed: int = 0, out_path: str = OUT) -> Dict:
     import jax
 
     from repro.configs import get_config
     from repro.configs.base import AmoebaConfig
-    from repro.control import train_serve_predictor
+    from repro.control import (build_serve_corpus, serve_feature_ablation,
+                               train_serve_predictor)
     from repro.fleet import (bursty_longtail_trace, replay_modes,
                              replay_policies)
     from repro.models import transformer as T
+    from repro.serve.engine import make_decode_fn
 
     cfg = get_config("qwen3-14b", reduced=True)
     params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
@@ -77,13 +144,28 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
                           groups=groups, capacity=capacity, amoeba=ladder,
                           model=model)
     out["policies"] = pol
+    # the Fig 20 ablation: which serve feature carries the decision?
+    Xc, yc = build_serve_corpus(n_samples=512, capacity=capacity,
+                                max_ways=ladder.max_ways,
+                                label_margin=ladder.label_margin)
+    ablation = serve_feature_ablation(model, Xc, yc, steps=250)
     # sibling key, not inside "policies": keeps that mapping homogeneous
     # (one run summary per policy name) for downstream consumers
     out["predictor_model"] = {
         "train_accuracy": round(minfo["train_accuracy"], 4),
         "n": minfo["n"],
         "final_nll": round(minfo["final_nll"], 5),
+        "feature_ablation": ablation,
     }
+    top_feat = max(ablation, key=lambda k: ablation[k]["mean_abs_impact"])
+    print("fig20 ablation: " + "  ".join(
+        f"{k}={v['mean_abs_impact']:.2f}" for k, v in ablation.items())
+        + f"  (dominant: {top_feat})")
+
+    print("\n== composition sweep (heterogeneous vs equal ladders) ==")
+    out["composition_sweep"] = composition_sweep(
+        cfg, params, rt, make_decode_fn(cfg, rt), groups=groups,
+        capacity=capacity, horizon=horizon, seed=seed)
 
     dyn, fus = out["amoeba_dynamic"], out["static_fused"]
     thr = pol["threshold"]
@@ -124,6 +206,11 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
           f"wins either: {v['learned_beats_threshold']} "
           f"(oracle bound: p99={v['oracle_p99']:.1f}, "
           f"eff={v['oracle_efficiency']:.3f})")
+    cv = out["composition_sweep"]["validation"]
+    print(f"hetero vs {cv['best_equal_ladder']}: "
+          f"p99 {cv['hetero_p99_speedup_vs_equal']:.2f}x, "
+          f"efficiency {cv['hetero_efficiency_gain_vs_equal']:.2f}x, "
+          f"wins either: {cv['hetero_beats_equal']}")
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {os.path.abspath(out_path)}")

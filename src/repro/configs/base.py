@@ -256,7 +256,11 @@ class AmoebaConfig:
     predictor_path: Optional[str] = None   # trained coefficient file
     # -- repro.control plane ------------------------------------------------
     policy: str = "threshold"       # threshold | predictor | oracle | online
-    max_ways: int = 2               # topology ladder depth (1x8/2x4/4x2...)
+    max_ways: int = 2               # max parts per group topology
+    # heterogeneous compositions: allow unequal part sizes like (5, 3)
+    # with per-part split/fuse moves; False pins the balanced
+    # power-of-two ladder (1x8/2x4/4x2) with whole-group moves
+    hetero: bool = True
     min_gain: float = 0.0           # amortization floor for further splits
     proba_band: float = 0.10        # predictor hysteresis band around 0.5
     oracle_margin: float = 0.02     # oracle's required improvement to move

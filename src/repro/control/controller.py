@@ -1,8 +1,11 @@
 """Group- and chip-level reconfiguration controllers.
 
 :class:`GroupController` is the single split/fuse state machine in the
-codebase: it owns a topology (``ways``), enforces the dwell that
-amortizes reconfiguration cost, asks its
+codebase: it owns a topology (an integer composition of the group's
+capacity), enforces the *per-part* dwell clocks that amortize
+reconfiguration cost — a part that just reconfigured blocks its own next
+move without freezing its siblings, the paper's independent
+neighboring-SM moves — asks its
 :class:`~repro.control.policies.ReconfigPolicy` for a proposal each
 decision tick, and applies the
 :class:`~repro.control.space.ConfigSpace` amortization check before any
@@ -14,40 +17,48 @@ this one object.
 reconfigure independently, but the *mix* of fused and split pairs is a
 chip property.  It watches the fleet's long-request fraction and nudges
 individual group controllers (through the same dwell-checked transition
-path) so the number of split groups tracks the tail mass of the load.
+path) so the number of split groups — and, under sustained tail mass,
+how deeply the divergent ones are split — tracks the load.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.control.features import FeatureVector, ReplayBuffer
 from repro.control.policies import Decision, ReconfigPolicy, ThresholdPolicy
-from repro.control.space import ConfigSpace
+from repro.control.space import ConfigSpace, Topology, TopologyLike, n_parts
 
 
 @dataclass
 class ControlState:
     """The one copy of a group's reconfiguration state."""
-    ways: int = 1
+    topology: Topology = (1,)
     steps_in_state: int = 0
     step: int = 0
+    # ticks since each part was last reconfigured — the per-part dwell
+    # clocks (aligned with ``topology``)
+    part_ages: List[int] = field(default_factory=lambda: [0])
     # (step, ways, divergence) per observe call — Fig 19's timeline
     history: List[Tuple[int, int, float]] = field(default_factory=list)
-    # (step, from_ways, to_ways, gain, reason) per applied transition
-    transitions: List[Tuple[int, int, int, float, str]] = \
+    # (step, from_topology, to_topology, gain, reason) per applied move
+    transitions: List[Tuple[int, Topology, Topology, float, str]] = \
         field(default_factory=list)
 
     @property
+    def ways(self) -> int:
+        return len(self.topology)
+
+    @property
     def split(self) -> bool:
-        return self.ways > 1
+        return len(self.topology) > 1
 
 
 class GroupController:
-    """Dwell + policy + amortization check for one reconfigurable group."""
+    """Per-part dwell + policy + amortization check for one group."""
 
     def __init__(self, policy: Optional[ReconfigPolicy] = None,
                  space: Optional[ConfigSpace] = None,
@@ -61,19 +72,29 @@ class GroupController:
         self.replay = replay
         self.label_margin = label_margin
         self.regroup_policy = regroup_policy
-        self.state = ControlState()
-        self._hint: Optional[int] = None
+        self.state = ControlState(topology=(self.space.capacity,))
+        self._hint: Optional[TopologyLike] = None
 
     # -- fleet-level override ------------------------------------------------
 
-    def request_topology(self, ways: int) -> None:
-        """Chip-level hint: move toward ``ways`` when dwell next allows.
+    def request_topology(self, t: TopologyLike) -> None:
+        """Chip-level hint: move toward ``t`` when dwell next allows.
 
-        The hint flows through the same transition path as policy
-        proposals (one rung per decision tick, amortization-checked), so
-        a fleet rebalance can never bypass the group's own safeguards.
+        ``t`` may be a part count (the fleet's usual nudge) or an exact
+        composition.  The hint flows through the same transition path as
+        policy proposals (one move per decision tick, amortization-
+        checked), so a fleet rebalance can never bypass the group's own
+        safeguards.
         """
-        self._hint = ways if self.space.legal(ways) else None
+        self._hint = t if self.space.legal(t) else None
+
+    def _hint_reached(self) -> bool:
+        if self._hint is None:
+            return False
+        if isinstance(self._hint, int):
+            return self.state.ways == self._hint
+        return self.state.topology == tuple(self._hint) \
+            or self.state.ways == len(self._hint)
 
     # -- the decision tick ----------------------------------------------------
 
@@ -81,56 +102,116 @@ class GroupController:
         if self.replay is None or fv.remaining is None \
                 or fv.remaining.size < 2:
             return
-        _, gain = self.space.best_ways(fv.remaining, self.regroup_policy)
+        # the lattice argmax scores up to ~hundred candidate partitions of
+        # a <=capacity batch — microseconds against the jitted decode step
+        # each tick pays for, and only paid when a replay buffer is wired
+        _, gain = self.space.best_topology(fv.remaining, self.regroup_policy)
         self.replay.add(fv.to_array(), 1.0 if gain > self.label_margin
                         else 0.0)
 
     def observe(self, fv: FeatureVector, max_ways_now: Optional[int] = None
                 ) -> int:
-        """Feed one decision tick's telemetry; returns the target topology.
+        """Feed one decision tick's telemetry; returns the current ways.
 
         ``max_ways_now`` caps how far the group may split *right now*
         (e.g. a single-request batch cannot be partitioned) without
-        touching the configured space.
+        touching the configured space.  The applied composition is read
+        from ``state.topology``.
         """
         st = self.state
         st.step += 1
         st.steps_in_state += 1
+        for i in range(len(st.part_ages)):
+            st.part_ages[i] += 1
         self._log_label(fv)
-        if st.steps_in_state < self.dwell:
+        # no part has dwelt long enough for *any* move to touch it
+        if max(st.part_ages) < self.dwell:
             st.history.append((st.step, st.ways, fv.divergence))
             return st.ways
 
         d = self._proposal(fv)
-        target = d.ways
-        if max_ways_now is not None and target > st.ways:
-            target = min(target, max(max_ways_now, st.ways))
-        if target != st.ways and \
-                self.space.transition_ok(st.ways, target, d.gain):
-            st.transitions.append((st.step, st.ways, target, d.gain,
-                                   d.reason))
-            st.ways = target
-            st.steps_in_state = 0
+        target = self._resolve(d, fv, max_ways_now)
+        if target is not None:
+            gain = d.gain if d.topology == target else self._move_gain(
+                fv, st.topology, target, d.gain)
+            touched = self.space.touched_parts(st.topology, target)
+            if self.space.transition_ok(st.topology, target, gain) \
+                    and all(st.part_ages[i] >= self.dwell for i in touched):
+                st.transitions.append((st.step, st.topology, target, gain,
+                                       d.reason))
+                st.part_ages = self._rebuild_ages(st.topology, target,
+                                                  st.part_ages)
+                st.topology = target
+                st.steps_in_state = 0
         # a fleet hint survives rejected attempts (capped by a momentary
         # max_ways_now or an under-floor gain) and retires only once the
         # group actually reaches the requested topology
-        if self._hint is not None and st.ways == self._hint:
+        if self._hint_reached():
             self._hint = None
         st.history.append((st.step, st.ways, fv.divergence))
         return st.ways
 
+    def _move_gain(self, fv: FeatureVector, cur: Topology, new: Topology,
+                   fallback: float) -> float:
+        if fv.remaining is None:
+            return fallback
+        return self.space.move_gain(fv.remaining, cur, new,
+                                    self.regroup_policy)
+
+    def _rebuild_ages(self, cur: Topology, new: Topology,
+                      ages: List[int]) -> List[int]:
+        """Carry untouched parts' dwell clocks across a move."""
+        touched = self.space.touched_parts(cur, new)
+        p = touched[0]
+        q = len(cur) - (touched[-1] + 1)
+        fresh = [0] * (len(new) - p - q)
+        return list(ages[:p]) + fresh + list(ages[len(cur) - q:])
+
+    def _resolve(self, d: Decision, fv: FeatureVector,
+                 max_ways_now: Optional[int]) -> Optional[Topology]:
+        """Materialize a Decision into one legal topology move (or None)."""
+        cur = self.state.topology
+        t = d.topology
+        if t is not None and (not self.space.legal(t) or t == cur):
+            t = None
+        if t is None:
+            k = d.ways
+            if k == len(cur):
+                return None
+            if k > len(cur):
+                t = self.space.suggest_split(cur, fv.remaining,
+                                             self.regroup_policy)
+            else:
+                t = self.space.suggest_fuse(cur, fv.remaining,
+                                            self.regroup_policy)
+        if t is None or t == cur:
+            return None
+        if max_ways_now is not None and len(t) > len(cur):
+            limit = max(max_ways_now, len(cur))
+            if len(t) > limit:
+                t = self.space.suggest_split(
+                    cur, fv.remaining, self.regroup_policy,
+                    max_parts=limit) if len(cur) < limit else None
+        return None if t == cur else t
+
     def _proposal(self, fv: FeatureVector) -> Decision:
-        if self._hint is not None and self._hint != self.state.ways:
-            step = self.state.ways * 2 if self._hint > self.state.ways \
-                else self.state.ways // 2
-            gain = self.space.gain(fv.remaining, step,
-                                   self.regroup_policy) \
-                if fv.remaining is not None else fv.divergence
-            return Decision(step, gain=gain, reason="fleet rebalance")
-        return self.policy.decide(fv, self.state.ways)
+        if self._hint is not None and not self._hint_reached():
+            cur = self.state.topology
+            want = n_parts(self._hint)
+            if want > len(cur):
+                t = self.space.suggest_split(cur, fv.remaining,
+                                             self.regroup_policy)
+            else:
+                t = self.space.suggest_fuse(cur, fv.remaining,
+                                            self.regroup_policy)
+            if t is not None:
+                gain = self._move_gain(fv, cur, t, fv.divergence)
+                return Decision(len(t), topology=t, gain=gain,
+                                reason="fleet rebalance")
+        return self.policy.decide(fv, self.state.topology)
 
     def reset(self) -> None:
-        self.state = ControlState()
+        self.state = ControlState(topology=(self.space.capacity,))
         self._hint = None
 
 
@@ -141,15 +222,21 @@ class FleetController:
     *long* work (live + queued requests past ``long_threshold`` tokens),
     re-evaluated every ``every`` wall ticks.  Groups are nudged — never
     forced — via :meth:`GroupController.request_topology`; the per-group
-    dwell and amortization check still gate the actual move.
+    dwell and amortization check still gate the actual move.  Because
+    groups hold heterogeneous compositions, the rebalance also *deepens*
+    the split mix: when every group the tail mass calls for is already
+    split but the long fraction stays past ``deepen_threshold``, the
+    most divergent split group is nudged one part further.
     """
 
     def __init__(self, long_threshold: int = 24, every: int = 16,
-                 min_split: int = 0, max_split: Optional[int] = None):
+                 min_split: int = 0, max_split: Optional[int] = None,
+                 deepen_threshold: float = 0.5):
         self.long_threshold = long_threshold
         self.every = max(every, 1)
         self.min_split = min_split
         self.max_split = max_split
+        self.deepen_threshold = deepen_threshold
         self.rebalances = 0
 
     def desired_split_groups(self, long_frac: float, n_groups: int) -> int:
@@ -158,6 +245,13 @@ class FleetController:
             if long_frac > 0 else 0
         hi = self.max_split if self.max_split is not None else n_groups
         return max(self.min_split, min(want, hi))
+
+    @staticmethod
+    def _divergence(g) -> float:
+        rem = np.asarray([r.remaining for r in g.live_requests()],
+                         np.float64)
+        return 0.0 if rem.size == 0 or rem.max() <= 0 \
+            else 1.0 - rem.mean() / rem.max()
 
     def rebalance(self, tick: int, groups: Sequence) -> int:
         """Nudge the fleet's split mix; returns hints issued this call.
@@ -179,18 +273,15 @@ class FleetController:
                 long_n += r.max_new_tokens >= self.long_threshold
         if total == 0:
             return 0
-        want = self.desired_split_groups(long_n / total, len(groups))
+        long_frac = long_n / total
+        want = self.desired_split_groups(long_frac, len(groups))
         split = [g for g in groups if g.controller.state.split]
         fused = [g for g in groups if not g.controller.state.split]
         issued = 0
         if len(split) < want:
             # split the most divergent fused groups first
-            def div(g):
-                rem = np.asarray([r.remaining for r in g.live_requests()],
-                                 np.float64)
-                return 0.0 if rem.size == 0 or rem.max() <= 0 \
-                    else 1.0 - rem.mean() / rem.max()
-            for g in sorted(fused, key=div, reverse=True)[:want - len(split)]:
+            for g in sorted(fused, key=self._divergence,
+                            reverse=True)[:want - len(split)]:
                 g.controller.request_topology(2)
                 issued += 1
         elif len(split) > want:
@@ -198,5 +289,17 @@ class FleetController:
             for g in sorted(split, key=lambda g: g.load())[:len(split) - want]:
                 g.controller.request_topology(1)
                 issued += 1
+        elif split and long_frac > self.deepen_threshold:
+            # the split mix is right-sized but the tail mass persists:
+            # push the most divergent split group one part deeper
+            # (ladder spaces only admit power-of-two counts, so fall
+            # back to the next rung when +1 is not legal)
+            g = max(split, key=self._divergence)
+            ways = g.controller.state.ways
+            for deeper in (ways + 1, ways * 2):
+                if g.controller.space.legal(deeper):
+                    g.controller.request_topology(deeper)
+                    issued += 1
+                    break
         self.rebalances += issued > 0
         return issued

@@ -94,6 +94,12 @@ class ReplayBuffer:
     :class:`~repro.control.policies.OnlinePolicy` periodically refits its
     logistic model from the buffer — the online-retraining loop the paper
     leaves as future work ("the model could be retrained on-line").
+
+    Two staleness controls keep a regime change (bursty -> steady) from
+    dominating the fit for ``maxlen`` samples: :meth:`weighted_dataset`
+    decays each sample's fit weight exponentially with its age, and
+    :meth:`reset` is the drift-reset hook that drops everything but the
+    newest window outright.
     """
 
     def __init__(self, maxlen: int = 4096):
@@ -112,6 +118,38 @@ class ReplayBuffer:
         if not self._x:
             return np.zeros((0, len(SERVE_FEATURES))), np.zeros((0,))
         return np.stack(list(self._x)), np.asarray(list(self._y))
+
+    def weighted_dataset(self, half_life: Optional[int] = None
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(X, y, w) with recency weights ``w = 0.5 ** (age / half_life)``.
+
+        The newest sample has age 0 (weight 1.0); a sample one half-life
+        older counts half as much in the refit.  ``half_life=None``
+        returns uniform weights (the legacy FIFO behavior).
+        """
+        X, y = self.dataset()
+        n = X.shape[0]
+        if half_life is None or n == 0:
+            return X, y, np.ones(n)
+        age = np.arange(n - 1, -1, -1, dtype=np.float64)
+        return X, y, 0.5 ** (age / max(half_life, 1))
+
+    def tail(self, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """The newest ``n`` samples — the drift-detection window."""
+        X, y = self.dataset()
+        return X[-n:], y[-n:]
+
+    def reset(self, keep_last: int = 0) -> None:
+        """Drift-reset hook: forget everything but the newest samples."""
+        if keep_last <= 0:
+            self._x.clear()
+            self._y.clear()
+            return
+        xs, ys = list(self._x)[-keep_last:], list(self._y)[-keep_last:]
+        self._x.clear()
+        self._y.clear()
+        self._x.extend(xs)
+        self._y.extend(ys)
 
     def label_balance(self) -> float:
         """Fraction of positive (split-wins) labels — refit gate."""

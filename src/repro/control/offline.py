@@ -12,7 +12,7 @@ drops straight into :class:`~repro.control.policies.PredictorPolicy`.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -40,10 +40,16 @@ def _sample_remaining(rng: np.random.Generator, n: int) -> np.ndarray:
 def build_serve_corpus(n_samples: int = 2048, capacity: int = 8,
                        max_ways: int = 2, label_margin: float = 0.02,
                        regroup_policy: str = "warp_regroup",
-                       seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (X (N, F), y (N,)) with y=1 iff splitting realizes a win."""
+                       seed: int = 0, hetero: bool = True
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (X (N, F), y (N,)) with y=1 iff reconfiguring wins.
+
+    The label is the realized win of the best topology in the group's
+    composition lattice (``hetero=False`` restricts it to the balanced
+    ladder — the pre-composition labels).
+    """
     rng = np.random.default_rng(seed)
-    space = ConfigSpace(capacity=capacity, max_ways=max_ways)
+    space = ConfigSpace(capacity=capacity, max_ways=max_ways, hetero=hetero)
     X = np.zeros((n_samples, len(SERVE_FEATURES)))
     y = np.zeros(n_samples)
     for i in range(n_samples):
@@ -52,7 +58,7 @@ def build_serve_corpus(n_samples: int = 2048, capacity: int = 8,
         fv = FeatureVector.from_group(
             remaining, queue_depth=int(rng.integers(0, 3 * capacity)),
             arrival_rate=float(rng.uniform(0.0, 2.0)), capacity=capacity)
-        _, gain = space.best_ways(remaining, regroup_policy)
+        _, gain = space.best_topology(remaining, regroup_policy)
         X[i] = fv.to_array()
         y[i] = 1.0 if gain > label_margin else 0.0
     return X, y
@@ -61,8 +67,48 @@ def build_serve_corpus(n_samples: int = 2048, capacity: int = 8,
 def train_serve_predictor(n_samples: int = 2048, capacity: int = 8,
                           max_ways: int = 2, label_margin: float = 0.02,
                           regroup_policy: str = "warp_regroup",
-                          seed: int = 0, steps: int = 1500):
+                          seed: int = 0, steps: int = 1500,
+                          hetero: bool = True):
     """Train the serve-level logistic model; returns (model, info)."""
     X, y = build_serve_corpus(n_samples, capacity, max_ways, label_margin,
-                              regroup_policy, seed)
+                              regroup_policy, seed, hetero=hetero)
     return P.train_logistic(X, y, feature_names=SERVE_FEATURES, steps=steps)
+
+
+def serve_feature_ablation(model: P.LogisticModel, X: np.ndarray,
+                           y: np.ndarray, steps: int = 400
+                           ) -> Dict[str, Dict[str, float]]:
+    """Paper Fig 20 at the serve level: what actually carries the decision.
+
+    For each feature reports the mean absolute per-sample impact
+    (standardized value x coefficient — the paper's impact metric) and
+    the drop-one refit accuracy: retrain without the feature and see how
+    much the corpus accuracy falls.  A feature whose removal costs
+    nothing is dead weight in the online refit loop.
+    """
+    names = model.feature_names or tuple(
+        f"f{i}" for i in range(X.shape[1]))
+    impacts = np.abs(np.asarray(P.feature_impacts(
+        model, np.asarray(X, np.float64))))
+    mean_abs = impacts.mean(axis=0)
+    # the drop-one baseline is a full-feature model retrained on the SAME
+    # (X, y, steps) budget, so accuracy_cost isolates the feature instead
+    # of conflating it with the passed-in model's larger training run
+    full, _ = P.train_logistic(X, y, feature_names=names, steps=steps)
+    full_acc = float(np.mean(
+        (np.asarray(P.predict_proba(full, X)) > 0.5) == (y > 0.5)))
+    out: Dict[str, Dict[str, float]] = {}
+    for i, name in enumerate(names):
+        keep = [j for j in range(X.shape[1]) if j != i]
+        sub, _ = P.train_logistic(
+            X[:, keep], y,
+            feature_names=tuple(names[j] for j in keep), steps=steps)
+        sub_acc = float(np.mean(
+            (np.asarray(P.predict_proba(sub, X[:, keep])) > 0.5)
+            == (y > 0.5)))
+        out[name] = {
+            "mean_abs_impact": round(float(mean_abs[i]), 4),
+            "drop_one_accuracy": round(sub_acc, 4),
+            "accuracy_cost": round(full_acc - sub_acc, 4),
+        }
+    return out

@@ -3,8 +3,11 @@
 The paper's monitor -> predict -> reconfigure loop (§4.1, Fig 7) appears
 at three levels of this reproduction — the cycle-level simulator, the
 serving engine, and the trainer.  Each policy here answers the same
-question at a decision point: *given the telemetry, how many ways should
-this group be partitioned?*
+question at a decision point: *given the telemetry, what topology should
+this group take?*  Topologies are integer compositions of the group's
+capacity (:mod:`repro.control.space`), so a proposal may be the paper's
+heterogeneous cut — ``(5, 3)`` for a skewed tail — not just a ladder
+rung.
 
 * :class:`ThresholdPolicy` — the paper's fixed-ratio hysteresis: split
   past ``split_threshold`` when the regroup gain is positive, re-fuse
@@ -12,17 +15,19 @@ this group be partitioned?*
   ``AmoebaController.observe``).
 * :class:`PredictorPolicy` — §4.1.3's logistic scalability model run
   online over a feature vector ("a single MAC per feature").
-* :class:`OraclePolicy` — run-both-pick-better: scores every candidate
-  topology with a caller-supplied measure (the simulator's dual static
-  runs, or the true slot-cost of the live batch) and takes the argmax.
-* :class:`OnlinePolicy` — PredictorPolicy plus periodic refit from a
-  replay buffer of (features, realized-win) labels; bootstraps from the
-  threshold rule until the first fit.
+* :class:`OraclePolicy` — run-both-pick-better: searches the composition
+  lattice with a caller-supplied measure (the simulator's dual static
+  runs, or the true slot-cost of the live batch) and steps toward the
+  argmax one move at a time.
+* :class:`OnlinePolicy` — PredictorPolicy plus periodic recency-weighted
+  refits from a replay buffer of (features, realized-win) labels, with a
+  drift-reset hook; bootstraps from the threshold rule until the first
+  fit.
 
 Policies are *advisory*: they propose a topology; the
-:class:`~repro.control.controller.GroupController` enforces dwell and the
-:class:`~repro.control.space.ConfigSpace` amortization check before any
-transition happens.
+:class:`~repro.control.controller.GroupController` enforces per-part
+dwell and the :class:`~repro.control.space.ConfigSpace` amortization
+check before any transition happens.
 """
 from __future__ import annotations
 
@@ -32,18 +37,34 @@ from typing import Callable, Dict, List, Optional, Protocol, Tuple
 import numpy as np
 
 from repro.control.features import SERVE_FEATURES, FeatureVector, ReplayBuffer
-from repro.control.space import ConfigSpace
+from repro.control.space import ConfigSpace, Topology, TopologyLike, n_parts
 from repro.core import predictor as P
 from repro.core.regroup import regroup_gain
 
 
 @dataclass
 class Decision:
-    """A proposed topology with the evidence behind it."""
+    """A proposed topology with the evidence behind it.
+
+    ``ways`` is the part count (the legacy scalar every caller already
+    understands); ``topology`` carries the exact composition when the
+    policy could compute one — the controller materializes a skew-aware
+    move itself when it is None.
+    """
     ways: int
     proba: float = 0.5            # P(more-split is better), when meaningful
     gain: float = 0.0             # predicted relative slot-waste saving
     reason: str = ""
+    topology: Optional[Topology] = None
+
+
+def _normalize(cur: TopologyLike, space: Optional[ConfigSpace]
+               ) -> Tuple[Optional[Topology], int]:
+    """(topology or None, part count) from an int-or-tuple current state."""
+    if isinstance(cur, int):
+        return (space.as_topology(cur) if space is not None else None,
+                cur)
+    return tuple(cur), len(cur)
 
 
 # -- the shared hysteresis primitive -----------------------------------------
@@ -72,7 +93,7 @@ class ReconfigPolicy(Protocol):
     """Protocol every policy implements."""
     name: str
 
-    def decide(self, fv: FeatureVector, ways: int) -> Decision:
+    def decide(self, fv: FeatureVector, ways: TopologyLike) -> Decision:
         """Propose a topology given telemetry and the current topology."""
         ...
 
@@ -87,22 +108,58 @@ class ThresholdPolicy:
     split_threshold: float = 0.25
     fuse_threshold: float = 0.10
     regroup_policy: str = "warp_regroup"
+    space: Optional[ConfigSpace] = None
     name: str = "threshold"
 
-    def decide(self, fv: FeatureVector, ways: int) -> Decision:
+    def decide(self, fv: FeatureVector, cur: TopologyLike) -> Decision:
+        topo, ways = _normalize(cur, self.space)
+        smart = self.space is not None and topo is not None \
+            and fv.remaining is not None
         split_now, fuse_now = hysteresis_toggle(
             np.array(ways > 1), np.array(fv.divergence),
             self.split_threshold, self.fuse_threshold,
             want_split=np.array(True), want_fuse=np.array(False))
         if bool(split_now):
+            if smart:
+                t = self.space.suggest_split(topo, fv.remaining,
+                                             self.regroup_policy)
+                if t is not None:
+                    g = self.space.move_gain(fv.remaining, topo, t,
+                                             self.regroup_policy)
+                    if g > 0.0:
+                        return Decision(
+                            len(t), proba=1.0, gain=g, topology=t,
+                            reason=f"divergence {fv.divergence:.3f} > "
+                                   f"{self.split_threshold}")
+                return Decision(ways, reason="hold")
             gain = (regroup_gain(fv.remaining, self.regroup_policy)
                     if fv.remaining is not None else fv.divergence)
             if gain > 0.0:
                 return Decision(ways * 2, proba=1.0, gain=gain,
                                 reason=f"divergence {fv.divergence:.3f} > "
                                        f"{self.split_threshold}")
+        elif ways > 1 and fv.divergence > self.split_threshold and smart:
+            # already split but the live mix drifted divergent again:
+            # deepen or re-cut the composition (the hysteresis pair
+            # above only handles the fused<->split toggle)
+            t = self.space.suggest_improve(topo, fv.remaining,
+                                           self.regroup_policy)
+            if t is not None:
+                g = self.space.move_gain(fv.remaining, topo, t,
+                                         self.regroup_policy)
+                if g > 0.0:
+                    return Decision(
+                        len(t), proba=1.0, gain=g, topology=t,
+                        reason=f"recut: divergence {fv.divergence:.3f} > "
+                               f"{self.split_threshold}")
+            return Decision(ways, reason="hold")
         elif bool(fuse_now):
-            return Decision(ways // 2, proba=0.0, gain=0.0,
+            t = None
+            if self.space is not None and topo is not None:
+                t = self.space.suggest_fuse(topo, fv.remaining,
+                                            self.regroup_policy)
+            return Decision(len(t) if t is not None else ways // 2,
+                            proba=0.0, gain=0.0, topology=t,
                             reason=f"divergence {fv.divergence:.3f} < "
                                    f"{self.fuse_threshold}")
         return Decision(ways, reason="hold")
@@ -146,6 +203,20 @@ class PredictorPolicy:
         p = float(P.predict_proba(self.model, np.asarray(x, np.float64)))
         return p if self.positive_means_split else 1.0 - p
 
+    def feature_impacts(self, x: np.ndarray) -> Dict[str, float]:
+        """Paper Fig 20 at the serve level: per-feature impact of one
+        decision point (standardized value x coefficient).  Positive
+        entries push toward splitting under the serve label convention.
+        """
+        if self.model is None:
+            raise ValueError("feature_impacts needs a trained model")
+        imp = np.asarray(P.feature_impacts(self.model,
+                                           np.asarray(x, np.float64)))
+        if not self.positive_means_split:
+            imp = -imp
+        names = self.model.feature_names or SERVE_FEATURES
+        return {name: float(v) for name, v in zip(names, imp)}
+
     def choose_static(self, features: np.ndarray) -> bool:
         """One-shot per-kernel choice: True = fuse (the gpusim path).
 
@@ -154,7 +225,8 @@ class PredictorPolicy:
         """
         return self.proba_split(features) < 0.5
 
-    def decide(self, fv: FeatureVector, ways: int) -> Decision:
+    def decide(self, fv: FeatureVector, cur: TopologyLike) -> Decision:
+        topo, ways = _normalize(cur, self.space)
         p = self.proba_split(fv.to_array())
         if p > 0.5 + self.proba_band / 2:
             # gain is the *true* predicted slot-waste saving so the
@@ -162,71 +234,137 @@ class PredictorPolicy:
             # wrong model; model confidence only stands in when no live
             # remaining lengths exist to score (computed in this branch
             # only — hold/fuse ticks never consume it)
+            t = None
             if fv.remaining is None:
                 gain = p - 0.5
-            elif self.space is not None:
-                gain = self.space.gain(fv.remaining, max(ways, 1) * 2,
-                                       self.regroup_policy)
+            elif topo is not None and self.space is not None:
+                # deepen from fused; deepen-or-recut once already split
+                t = self.space.suggest_improve(topo, fv.remaining,
+                                               self.regroup_policy)
+                gain = 0.0 if t is None else self.space.move_gain(
+                    fv.remaining, topo, t, self.regroup_policy)
             else:
                 gain = regroup_gain(fv.remaining, self.regroup_policy)
-            return Decision(ways * 2, proba=p, gain=gain,
+            return Decision(len(t) if t is not None else ways * 2,
+                            proba=p, gain=gain, topology=t,
                             reason=f"P(split)={p:.3f}")
         if p < 0.5 - self.proba_band / 2 and ways > 1:
-            return Decision(ways // 2, proba=p, reason=f"P(split)={p:.3f}")
+            t = None if self.space is None or topo is None \
+                else self.space.suggest_fuse(topo, fv.remaining,
+                                             self.regroup_policy)
+            return Decision(len(t) if t is not None else ways // 2,
+                            proba=p, topology=t, reason=f"P(split)={p:.3f}")
         return Decision(ways, proba=p, reason="inside hysteresis band")
 
 
 # ---------------------------------------------------------------------------
-# OraclePolicy — run-both-pick-better
+# OraclePolicy — run-both-pick-better over the composition lattice
 # ---------------------------------------------------------------------------
 
 @dataclass
 class OraclePolicy:
-    """Score every candidate topology; move to the argmax.
+    """Search the composition lattice; step toward the argmax.
 
-    ``score(ways, fv) -> utility`` is caller-supplied: the simulator
+    ``score(topology, fv) -> utility`` is caller-supplied: the simulator
     measures both static configurations' IPC (the label-generation path
     that used to live inside ``gpusim.sim.run_benchmark``); the serving
     engine defaults to the true relative slot-waste saving of the live
-    batch.  ``margin`` is the improvement a move must show over the
-    current topology's score — the oracle's hysteresis.
+    batch.  With the default score the target comes from
+    :meth:`ConfigSpace.best_topology` (the global lattice argmax); with
+    a custom score only the current topology's one-move frontier is
+    scored each tick — either way the oracle emits exactly one legal
+    move per decision.  ``margin`` is the improvement a split must show
+    over the current topology's score — the oracle's hysteresis; fusing
+    back is preferred on ties (it restores the wide configuration's
+    coalescing for free).
     """
     space: ConfigSpace = field(default_factory=lambda: ConfigSpace(2))
-    score: Optional[Callable[[int, Optional[FeatureVector]], float]] = None
+    score: Optional[Callable[[TopologyLike, Optional[FeatureVector]],
+                             float]] = None
     margin: float = 0.02
     regroup_policy: str = "warp_regroup"
     name: str = "oracle"
 
-    def _score(self, ways: int, fv: Optional[FeatureVector]) -> float:
+    def _score(self, t: TopologyLike, fv: Optional[FeatureVector]) -> float:
         if self.score is not None:
-            return float(self.score(ways, fv))
+            return float(self.score(t, fv))
         if fv is None or fv.remaining is None:
             return 0.0
-        return self.space.gain(fv.remaining, ways, self.regroup_policy)
+        return self.space.gain(fv.remaining, t, self.regroup_policy)
 
     def choose_static(self, features=None) -> bool:
         """One-shot choice: True = fused (ways=1) scores strictly higher."""
         return self._score(1, None) > self._score(2, None)
 
-    def decide(self, fv: FeatureVector, ways: int) -> Decision:
-        scores = {w: self._score(w, fv) for w in self.space.topologies()}
-        cur = scores.get(ways, 0.0)
-        top = max(scores.values())
-        # least-split topology whose score is within the margin of the best:
-        # splitting needs a strict win, fusing back is preferred on ties
-        # (it restores the wide configuration's coalescing for free)
-        target = min(w for w, s in scores.items() if s >= top - self.margin)
-        if target > ways and top > cur + self.margin:
-            step = ways * 2
-        elif target < ways:
-            step = ways // 2
+    def _target(self, cur: Topology, fv: FeatureVector
+                ) -> Tuple[Topology, float, float]:
+        """(target, best_score, cur_score) under the active measure.
+
+        The target is the *least-split* topology scoring within
+        ``margin`` of the lattice best — the fuse-back hysteresis: a
+        split whose edge over wider configurations has shrunk below the
+        margin is not worth its lost coalescing, so the target drops
+        back toward fused.
+        """
+        cur_score = self._score(cur, fv)
+        if self.score is None and fv.remaining is not None:
+            try:
+                comps = self.space.compositions()
+            except ValueError:              # lattice too large to scan
+                comps = None
+            if comps is not None:
+                # one pass: compositions are ordered fused-first by part
+                # count, so the first within-margin hit is least-split
+                gains = [(t, self.space.gain(fv.remaining, t,
+                                             self.regroup_policy))
+                         for t in comps]
+                top = max(g for _, g in gains)
+                for t, g in gains:
+                    if g >= top - self.margin:
+                        return t, top, cur_score
+            best, top = self.space.best_topology(
+                fv.remaining, self.regroup_policy)
+            if 0.0 >= top - self.margin:    # fused is within margin
+                return (self.space.capacity,), top, cur_score
+            return best, top, cur_score
+        best, best_score = cur, cur_score
+        for nb in self.space.neighbors(cur):
+            s = self._score(nb, fv)
+            if s > best_score + 1e-12 or (
+                    s > best_score - 1e-12 and len(nb) < len(best)):
+                best, best_score = nb, s
+        if self._score((self.space.capacity,), fv) >= best_score - self.margin:
+            best = (self.space.capacity,)
+        return best, best_score, cur_score
+
+    def decide(self, fv: FeatureVector, cur: TopologyLike) -> Decision:
+        cur_t, ways = _normalize(cur, self.space)
+        if cur_t is None:
+            cur_t = self.space.as_topology(ways)
+        target, top, cur_score = self._target(cur_t, fv)
+        if target != cur_t and len(target) >= len(cur_t) \
+                and top > cur_score + self.margin:
+            # deeper or re-cut: take the best single improving move
+            step = self.space.suggest_improve(cur_t, fv.remaining,
+                                              self.regroup_policy)
+            if step is None:
+                step = self.space.suggest_split(cur_t, fv.remaining,
+                                                self.regroup_policy)
+        elif len(target) < len(cur_t):
+            step = self.space.suggest_fuse(cur_t, fv.remaining,
+                                           self.regroup_policy)
         else:
-            return Decision(ways, gain=cur, reason="oracle: hold")
-        gain = self.space.gain(fv.remaining, step, self.regroup_policy) \
-            if fv.remaining is not None else abs(top - cur)
-        return Decision(step, proba=1.0 if step > ways else 0.0, gain=gain,
+            return Decision(ways, gain=cur_score, reason="oracle: hold")
+        if step is None:
+            return Decision(ways, gain=cur_score, reason="oracle: hold")
+        gain = self.space.move_gain(fv.remaining, cur_t, step,
+                                    self.regroup_policy) \
+            if fv.remaining is not None else abs(top - cur_score)
+        return Decision(len(step), topology=step,
+                        proba=1.0 if len(step) > len(cur_t) else 0.0,
+                        gain=gain,
                         reason=f"oracle: {self.space.name(target)} scores "
-                               f"{scores[target]:.3f} vs {cur:.3f}")
+                               f"{top:.3f} vs {cur_score:.3f}")
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +380,16 @@ class OnlinePolicy:
     ``refit_every`` decisions refits) a logistic model via
     ``predictor.train_logistic`` — whose per-epoch loss history is kept
     in ``refit_info`` so convergence is observable.
+
+    Refits are *recency-weighted*: each replay sample's weight decays
+    exponentially with its age (``half_life`` newer samples count double
+    vs samples one half-life older), so a regime change stops dominating
+    the fit long before the FIFO evicts it.  A drift check runs before
+    every refit: when the fitted model's accuracy over the newest
+    ``drift_window`` labels falls below ``drift_threshold`` the buffer
+    resets to that window and the policy drops back to the threshold
+    bootstrap until enough fresh samples accumulate (the explicit
+    forget-now path for bursty -> steady regime changes).
     """
     replay: ReplayBuffer = field(default_factory=ReplayBuffer)
     bootstrap: ThresholdPolicy = field(default_factory=ThresholdPolicy)
@@ -250,6 +398,9 @@ class OnlinePolicy:
     min_samples: int = 48
     train_steps: int = 300
     space: Optional[ConfigSpace] = None
+    half_life: Optional[int] = 512
+    drift_window: int = 32
+    drift_threshold: float = 0.35
     name: str = "online"
 
     def __post_init__(self):
@@ -259,22 +410,54 @@ class OnlinePolicy:
             positive_means_split=True, space=self.space)
         self._decisions = 0
         self.refits = 0
+        self.drift_resets = 0
         self.refit_info: List[Dict] = []
 
     @property
     def fitted(self) -> bool:
         return self._inner.model is not None
 
+    def drift_detected(self) -> bool:
+        """True when the model disagrees with the newest realized labels."""
+        if not self.fitted or len(self.replay) < self.drift_window:
+            return False
+        X, y = self.replay.tail(self.drift_window)
+        if len(set(y.tolist())) < 2:
+            return False                    # one-class window: no signal
+        # one batched predict over the whole window (the inner policy is
+        # always positive_means_split, so proba IS P(split wins))
+        proba = np.asarray(P.predict_proba(self._inner.model,
+                                           np.asarray(X, np.float64)))
+        return float(np.mean((proba > 0.5) == (y > 0.5))) \
+            < self.drift_threshold
+
+    def reset_on_drift(self) -> bool:
+        """The drift-reset hook: forget the stale regime immediately.
+
+        Keeps only the newest ``drift_window`` samples, drops the fitted
+        model (back to the threshold bootstrap), and lets the normal
+        refit cadence pick the fresh regime up.  Also callable by an
+        outer controller that detects drift out-of-band.
+        """
+        self.replay.reset(keep_last=self.drift_window)
+        self._inner.model = None
+        self.drift_resets += 1
+        return True
+
     def maybe_refit(self) -> bool:
+        if self.drift_detected():
+            self.reset_on_drift()
+            return False
         buf = self.replay
         if len(buf) < self.min_samples:
             return False
         balance = buf.label_balance()
         if balance <= 0.02 or balance >= 0.98:
             return False                    # one-class buffer: nothing to fit
-        X, y = buf.dataset()
+        X, y, w = buf.weighted_dataset(self.half_life)
         model, info = P.train_logistic(
-            X, y, feature_names=SERVE_FEATURES, steps=self.train_steps)
+            X, y, feature_names=SERVE_FEATURES, steps=self.train_steps,
+            sample_weight=w)
         self._inner.model = model
         self.refits += 1
         self.refit_info.append({
@@ -282,20 +465,21 @@ class OnlinePolicy:
             "final_nll": info["final_nll"],
             "loss_history_tail": [round(float(v), 5)
                                   for v in info["loss_history"][-5:]],
+            "drift_resets": self.drift_resets,
         })
         return True
 
-    def decide(self, fv: FeatureVector, ways: int) -> Decision:
+    def decide(self, fv: FeatureVector, cur: TopologyLike) -> Decision:
         self._decisions += 1
         if (not self.fitted and len(self.replay) >= self.min_samples) \
                 or (self.refit_every and
                     self._decisions % self.refit_every == 0):
             self.maybe_refit()
         if self.fitted:
-            d = self._inner.decide(fv, ways)
+            d = self._inner.decide(fv, cur)
             d.reason = f"online[{self.refits} fits] {d.reason}"
             return d
-        d = self.bootstrap.decide(fv, ways)
+        d = self.bootstrap.decide(fv, cur)
         d.reason = f"online[bootstrap] {d.reason}"
         return d
 
@@ -314,7 +498,7 @@ def make_policy(name: str, *, space: ConfigSpace,
     """Factory mapping ``AmoebaConfig.policy`` names onto policy objects."""
     if name == "threshold":
         return ThresholdPolicy(split_threshold, fuse_threshold,
-                               regroup_policy)
+                               regroup_policy, space=space)
     if name == "predictor":
         if model is None and model_path:
             model = P.load_model(model_path)
@@ -330,6 +514,6 @@ def make_policy(name: str, *, space: ConfigSpace,
         return OnlinePolicy(
             replay=replay if replay is not None else ReplayBuffer(),
             bootstrap=ThresholdPolicy(split_threshold, fuse_threshold,
-                                      regroup_policy),
+                                      regroup_policy, space=space),
             proba_band=proba_band, refit_every=refit_every, space=space)
     raise ValueError(f"unknown policy {name!r}; have {POLICY_NAMES}")

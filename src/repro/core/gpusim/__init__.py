@@ -10,9 +10,11 @@ per benchmark.  Every figure of §5 has a corresponding harness in
 ``benchmarks/``.
 """
 from repro.core.gpusim.sim import (
+    EXTENDED_SCHEMES,
     SCHEMES,
     SimResult,
     profile_features,
+    rank_chip_mixes,
     run_benchmark,
     run_all,
     FEATURE_NAMES,
@@ -20,6 +22,7 @@ from repro.core.gpusim.sim import (
 from repro.core.gpusim.workloads import WORKLOADS, Workload, workload_variants
 
 __all__ = [
-    "SCHEMES", "SimResult", "profile_features", "run_benchmark", "run_all",
+    "EXTENDED_SCHEMES", "SCHEMES", "SimResult", "profile_features",
+    "rank_chip_mixes", "run_benchmark", "run_all",
     "FEATURE_NAMES", "WORKLOADS", "Workload", "workload_variants",
 ]

@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.configs.paper_gpu import PAPER_GPU
 from repro.control import (ConfigSpace, OraclePolicy, PredictorPolicy,
-                           hysteresis_toggle)
+                           hysteresis_toggle, n_parts)
 from repro.core.gpusim.workloads import WORKLOADS, Workload
 
 # -- machine constants (derived from Table 1) -------------------------------
@@ -259,8 +259,53 @@ def profile_features(w: Workload) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Heterogeneous static chips (Fig 12): rank chip-level compositions
+# ---------------------------------------------------------------------------
+
+MIX_FRACTIONS = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def _mix_state(n_fused: int) -> np.ndarray:
+    """A static heterogeneous chip: the first ``n_fused`` pairs fused,
+    the rest split — the paper fuses *neighboring* SMs, so a chip
+    composition is exactly which contiguous pairs run wide."""
+    st = np.full(N_PAIRS, SPLIT_BASE)
+    st[:n_fused] = FUSED
+    return st
+
+
+def _static_ipc(w: Workload, st: np.ndarray, epochs: int) -> float:
+    jitter = (np.arange(N_PAIRS) * 7) % w.div_period
+    d_all = _divergence(w, np.arange(epochs), jitter)
+    total = 0.0
+    for t in range(epochs):
+        ipc, _ = _epoch_throughput(w, st, d_all[t], DIRECT_Q, False)
+        total += float(ipc.sum())
+    return total / max(epochs, 1)
+
+
+def rank_chip_mixes(w: Workload, fractions=MIX_FRACTIONS,
+                    epochs: int = EPOCHS // 4) -> list:
+    """Rank static chip compositions (n fused pairs + rest split) by IPC.
+
+    This is the composition-lattice view of Fig 12's heterogeneous
+    chips: between the all-split baseline and the all-fused scale-up
+    chip sit mixes that win when only part of the workload coalesces —
+    the chip-level analogue of a serving group's ``(5, 3)`` cut.
+    Returns dicts sorted best-first: ``{"mix", "n_fused", "ipc"}``.
+    """
+    rows = []
+    for f in fractions:
+        n = int(round(f * N_PAIRS))
+        rows.append({"mix": f"{n}F+{N_PAIRS - n}S", "n_fused": n,
+                     "ipc": _static_ipc(w, _mix_state(n), epochs)})
+    rows.sort(key=lambda r: (-r["ipc"], r["n_fused"]))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Schemes (Fig 12): baseline / scale_up / static_fuse / direct_split /
-# warp_regroup, plus DWS (Fig 21)
+# warp_regroup, plus DWS (Fig 21) and the static_mix composition chooser
 # ---------------------------------------------------------------------------
 
 def run_benchmark(w: Workload, scheme: str, *,
@@ -281,25 +326,33 @@ def run_benchmark(w: Workload, scheme: str, *,
     quarantine = {"direct_split": DIRECT_Q,
                   "warp_regroup": REGROUP_Q}.get(scheme, DIRECT_Q)
 
+    init_st: Optional[np.ndarray] = None
     if scheme == "baseline" or dws:
         want_fused = False
     elif scheme == "scale_up":
         want_fused = True
+    elif scheme == "static_mix":
+        # the composition chooser: rank Fig 12's heterogeneous chips
+        # (n fused pairs + rest split) and pin the best static mix
+        want_fused = False
+        best = rank_chip_mixes(w, epochs=max(epochs // 4, 8))[0]
+        init_st = _mix_state(best["n_fused"])
     else:  # static_fuse / direct_split / warp_regroup: a shared
         # repro.control policy makes the per-kernel static choice
         feats = profile_features(w)
         if fuse_decider is not None:
             policy = PredictorPolicy.from_decider(fuse_decider)
         else:
-            # ways=1 is the fused pair (one wide SM), ways=2 the split pair
+            # (2,) is the fused pair (one wide SM), (1, 1) the split pair
             policy = OraclePolicy(
                 space=ConfigSpace(capacity=2, max_ways=2),
-                score=lambda ways, fv: run_benchmark(
-                    w, "scale_up" if ways == 1 else "baseline",
+                score=lambda t, fv: run_benchmark(
+                    w, "scale_up" if n_parts(t) == 1 else "baseline",
                     epochs=epochs // 2).ipc)
         want_fused = policy.choose_static(feats)
 
-    st = np.full(N_PAIRS, FUSED if want_fused else SPLIT_BASE)
+    st = init_st if init_st is not None \
+        else np.full(N_PAIRS, FUSED if want_fused else SPLIT_BASE)
     trace = np.zeros((EPOCHS if epochs is None else epochs, N_PAIRS), np.int8)
     total_ipc = 0.0
     switches = 0
@@ -355,6 +408,9 @@ def run_benchmark(w: Workload, scheme: str, *,
 
 SCHEMES = ("baseline", "scale_up", "static_fuse", "direct_split",
            "warp_regroup", "dws")
+# static_mix (the chip-composition chooser) is opt-in: it multiplies the
+# run cost by the ranked candidates, so it rides outside the tier-1 sweep
+EXTENDED_SCHEMES = SCHEMES + ("static_mix",)
 
 
 def run_all(scheme: str, fuse_decider=None,

@@ -58,16 +58,26 @@ def feature_impacts(model: LogisticModel, x: jnp.ndarray) -> jnp.ndarray:
 def train_logistic(X: np.ndarray, y: np.ndarray, *,
                    feature_names: Sequence[str] = (),
                    l2: float = 1e-3, lr: float = 0.3, steps: int = 3000,
-                   seed: int = 0) -> Tuple[LogisticModel, dict]:
+                   seed: int = 0,
+                   sample_weight: Optional[np.ndarray] = None
+                   ) -> Tuple[LogisticModel, dict]:
     """Offline training (paper: 'a large amount of offline experimental
     data').  Full-batch gradient descent on the regularized NLL.
 
-    ``info["loss_history"]`` carries the per-step NLL trajectory so the
-    online-refit path (repro.control.policies.OnlinePolicy) can monitor
-    convergence across refits.
+    ``sample_weight`` scales each example's loss term (normalized to
+    mean 1) — the online-refit path passes exponential recency weights
+    so a stale regime stops steering the fit before the FIFO evicts it.
+    ``info["loss_history"]`` carries the per-step NLL trajectory so that
+    path (repro.control.policies.OnlinePolicy) can monitor convergence
+    across refits.
     """
     X = jnp.asarray(X, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
+    if sample_weight is None:
+        sw = jnp.ones_like(y)
+    else:
+        sw = jnp.asarray(sample_weight, jnp.float32)
+        sw = sw / jnp.maximum(jnp.mean(sw), 1e-9)
     mu = jnp.mean(X, axis=0)
     sigma = jnp.maximum(jnp.std(X, axis=0), 1e-6)
     Xs = (X - mu) / sigma
@@ -77,7 +87,7 @@ def train_logistic(X: np.ndarray, y: np.ndarray, *,
         w, b = params
         z = Xs @ w + b
         # numerically stable logistic loss
-        loss = jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+        loss = jnp.mean(sw * (jnp.logaddexp(0.0, z) - y * z))
         return loss + l2 * jnp.sum(w ** 2)
 
     w = jnp.zeros((F,), jnp.float32)

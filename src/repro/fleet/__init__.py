@@ -8,11 +8,12 @@ from repro.fleet.scheduler import (DEFAULT_MODES, ROUTERS, FleetEngine,
                                    replay_modes, replay_policies)
 from repro.fleet.telemetry import FleetTelemetry, RollingWindow
 from repro.fleet.traffic import (TenantProfile, bursty_longtail_trace,
-                                 make_trace, poisson_trace, uniform_trace)
+                                 make_trace, poisson_trace,
+                                 skewed_longtail_trace, uniform_trace)
 
 __all__ = [
     "FleetEngine", "ROUTERS", "DEFAULT_MODES", "replay_modes",
     "replay_policies", "FleetTelemetry", "RollingWindow",
     "TenantProfile", "make_trace", "poisson_trace",
-    "bursty_longtail_trace", "uniform_trace",
+    "bursty_longtail_trace", "skewed_longtail_trace", "uniform_trace",
 ]

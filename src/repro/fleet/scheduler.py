@@ -69,12 +69,28 @@ def route_least_loaded(req: Request, groups: Sequence[ReconfigurableGroup],
 
 def route_length_aware(req: Request, groups: Sequence[ReconfigurableGroup],
                        state: Dict) -> int:
-    """Bin by predicted length onto the heterogeneous group mix."""
+    """Bin by predicted length onto the heterogeneous group mix.
+
+    Predicted-long requests go to split groups, preferring the one whose
+    smallest part — the tail-quarantine slice — is tightest (a long
+    request in an s-slot part wastes s x length slot-steps, so the
+    narrowest fitting part wins); short requests prefer fused groups and,
+    among them, the widest lockstep slice.  Ties fall back to
+    least-loaded.
+    """
     thresh = state.get("long_threshold", FleetConfig.long_threshold)
     is_long = req.max_new_tokens >= thresh
     pref = [i for i, g in enumerate(groups) if g.is_split == is_long]
     pool = pref if pref else range(len(groups))
-    return min(pool, key=lambda i: (groups[i].load(), i))
+
+    def part_fit(g) -> int:
+        topo = getattr(g, "topology", None)
+        if not topo:
+            return 0
+        return min(topo) if is_long and len(topo) > 1 else -max(topo)
+
+    return min(pool, key=lambda i: (part_fit(groups[i]),
+                                    groups[i].load(), i))
 
 
 ROUTERS: Dict[str, Callable] = {
@@ -124,7 +140,8 @@ class FleetEngine:
                 acfg.policy,
                 space=ConfigSpace(capacity=fleet.capacity,
                                   max_ways=acfg.max_ways,
-                                  min_gain=acfg.min_gain),
+                                  min_gain=acfg.min_gain,
+                                  hetero=acfg.hetero),
                 split_threshold=acfg.split_threshold,
                 fuse_threshold=acfg.fuse_threshold,
                 regroup_policy=acfg.regroup_policy,
@@ -307,7 +324,8 @@ def replay_policies(model_cfg: ModelConfig, params, rt: T.Runtime,
         model, _ = train_serve_predictor(capacity=capacity,
                                          max_ways=amoeba.max_ways,
                                          label_margin=amoeba.label_margin,
-                                         regroup_policy=amoeba.regroup_policy)
+                                         regroup_policy=amoeba.regroup_policy,
+                                         hetero=amoeba.hetero)
     decode = make_decode_fn(model_cfg, rt)
     out: Dict[str, Dict] = {}
     for name in policies:

@@ -58,15 +58,18 @@ class GroupSnapshot:
     queue_depth: int
     live: int
     stats: ServeStats
+    topology: Optional[Tuple[int, ...]] = None
 
     def as_dict(self) -> Dict:
         return {
             "gid": self.gid, "mode": self.mode, "is_split": self.is_split,
+            "topology": list(self.topology) if self.topology else None,
             "queue_depth": self.queue_depth, "live": self.live,
             "ticks": self.stats.ticks, "slot_steps": self.stats.slot_steps,
             "useful_tokens": self.stats.useful_tokens,
             "efficiency": round(self.stats.efficiency, 4),
             "splits": self.stats.splits, "fuses": self.stats.fuses,
+            "resizes": getattr(self.stats, "resizes", 0),
             "completed": self.stats.completed,
         }
 
@@ -135,11 +138,13 @@ class FleetTelemetry:
         snaps = [GroupSnapshot(
             gid=g.gid, mode=g.mode, is_split=g.is_split,
             queue_depth=len(g.queue), live=len(g.live_requests()),
-            stats=g.stats) for g in groups]
+            stats=g.stats, topology=getattr(g, "topology", None))
+            for g in groups]
         slot_steps = sum(g.stats.slot_steps for g in groups)
         useful = sum(g.stats.useful_tokens for g in groups)
         completed = sum(g.stats.completed for g in groups)
-        churn = sum(g.stats.splits + g.stats.fuses for g in groups)
+        churn = sum(g.stats.splits + g.stats.fuses
+                    + getattr(g.stats, "resizes", 0) for g in groups)
         lats = self.latencies(requests)
         wall = max(self.wall_ticks, 1)
         out = {
@@ -169,6 +174,17 @@ class FleetTelemetry:
             "groups": [s.as_dict() for s in snaps],
         }
         control: Dict = {"replay_samples": len(self.replay)}
+        visited = set()
+        for g in groups:
+            ctl = getattr(g, "controller", None)
+            if ctl is not None:
+                for _, _frm, to, _, _ in ctl.state.transitions:
+                    visited.add(tuple(to))
+        if visited:
+            control["topologies_visited"] = [
+                list(t) for t in sorted(visited, key=lambda t: (len(t), t))]
+            control["hetero_topologies_visited"] = sum(
+                1 for t in visited if len(set(t)) > 1)
         if self.replay:
             control["replay_positive_frac"] = round(
                 self.replay.label_balance(), 3)

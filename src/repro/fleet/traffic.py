@@ -125,6 +125,29 @@ def bursty_longtail_trace(horizon: int, vocab_size: int, seed: int = 0,
     return make_trace([chat, batch], horizon, vocab_size, seed)
 
 
+def skewed_longtail_trace(horizon: int, vocab_size: int, seed: int = 0,
+                          rate: float = 0.7,
+                          p_long: float = 0.3) -> List[Request]:
+    """A steadily skewed mix: most requests are near-lockstep short turns,
+    a fat minority are an order of magnitude longer.
+
+    This is the regime where a heterogeneous composition pays: with ~30%
+    long mass a capacity-8 group wants the ``(5, 3)`` cut — five slots
+    lockstep-draining the short head while three quarantine the tail —
+    which no equal-ways ladder (``2x4``/``4x2``) can express.  Used by
+    the composition sweep in ``benchmarks/fleet_bench.py``.
+    """
+    skew = TenantProfile(
+        name="chat", rate=rate, length_dist="bimodal",
+        short_tokens=3, long_tokens=48, p_long=p_long,
+        burst_factor=2.0, burst_period=60, burst_duty=0.3)
+    drizzle = TenantProfile(
+        name="batch", rate=0.05, length_dist="lognormal",
+        mean_tokens=40.0, sigma=0.5, max_tokens=120,
+        prompt_lengths=(16,))
+    return make_trace([skew, drizzle], horizon, vocab_size, seed)
+
+
 def uniform_trace(rate: float, horizon: int, vocab_size: int,
                   seed: int = 0, tokens: int = 12) -> List[Request]:
     """Near-lockstep lengths — the regime where fused should win."""

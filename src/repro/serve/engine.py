@@ -11,11 +11,14 @@ paper's SM split; ``warp_regroup`` sorts by remaining work first,
 ``direct_split`` cuts in arrival order).  Parts re-fuse when the
 divergence signal drops.
 
-Topologies generalize the paper's binary pair to a k-way ladder
-(``1x8 -> 2x4 -> 4x2`` for a capacity-8 group): each rung halves every
-partition.  The fused/split lifecycle decisions live in
-:class:`repro.control.GroupController` — this module only *executes*
-them (prefill waves, KV-state partitioning, decode ticks).
+Topologies generalize the paper's binary pair to the full composition
+lattice of :class:`repro.control.ConfigSpace`: a capacity-8 group may
+run fused ``(8,)``, as the equal pair ``(4, 4)``, or as a heterogeneous
+cut like ``(5, 3)`` — each part owns its slot count, admits from the
+queue on its own, and drains independently.  The fused/split lifecycle
+decisions live in :class:`repro.control.GroupController` — this module
+only *executes* them (prefill waves, KV-state partitioning, decode
+ticks).
 :class:`ReconfigurableGroup` is the unit the fleet scheduler
 (``repro.fleet``) replicates N times; :class:`ServeEngine` is the N=1
 case and keeps the original public API.
@@ -42,7 +45,8 @@ import numpy as np
 
 from repro.configs.base import AmoebaConfig, ModelConfig
 from repro.control import (ArrivalRateTracker, ConfigSpace, FeatureVector,
-                           GroupController, ReplayBuffer, make_policy)
+                           GroupController, ReplayBuffer, Topology,
+                           balanced, make_policy)
 from repro.control.policies import ReconfigPolicy
 from repro.core.predictor import LogisticModel
 from repro.models import transformer as T
@@ -81,6 +85,7 @@ class ServeStats:
     prefill_tokens: int = 0
     splits: int = 0
     fuses: int = 0
+    resizes: int = 0               # same part count, re-cut slot budgets
     completed: int = 0
 
     @property
@@ -168,7 +173,8 @@ class ReconfigurableGroup:
         self.space = ConfigSpace(
             capacity=capacity,
             max_ways=amoeba.max_ways if mode == "dynamic" else 2,
-            min_gain=amoeba.min_gain)
+            min_gain=amoeba.min_gain,
+            hetero=amoeba.hetero if mode == "dynamic" else False)
         if mode == "dynamic":
             self._policy = policy or make_policy(
                 amoeba.policy, space=self.space,
@@ -196,8 +202,13 @@ class ReconfigurableGroup:
         self._decode = decode_fn or make_decode_fn(model_cfg, rt)
         self._arrivals = ArrivalRateTracker()
         # the current topology: one entry per partition (None = drained)
-        self._parts: List[Optional[_Group]] = \
-            [None, None] if mode == "split" else [None]
+        # and the matching per-part decode-slot budget — parts always
+        # sum to capacity, so non-power-of-two capacities waste nothing
+        if mode == "split":
+            self._slots: List[int] = list(balanced(capacity, 2))
+        else:
+            self._slots = [capacity]
+        self._parts: List[Optional[_Group]] = [None] * len(self._slots)
 
     # -- admission -------------------------------------------------------------
 
@@ -265,14 +276,17 @@ class ReconfigurableGroup:
 
     # -- topology --------------------------------------------------------------
 
-    def _reconfigure(self, target: int) -> None:
-        """Merge all live partitions and re-partition into ``target`` parts.
+    def _reconfigure(self, target: Topology) -> None:
+        """Merge all live partitions and re-partition onto ``target``.
 
         Executes the controller's decision: the KV states of the live
-        parts are concatenated and re-sliced along the batch axis, so
+        parts are concatenated and re-sliced along the batch axis into
+        parts sized to the target composition's slot budgets (a
+        ``(5, 3)`` cut quarantines the long tail on 3 slots), so
         reconfiguration never changes any request's results — only which
-        rows decode in lockstep.
+        rows decode in lockstep and how many slots each cohort owns.
         """
+        target = self.space.as_topology(target)
         live = [p for p in self._parts if p is not None]
         if len(live) == 1:
             merged = live[0]
@@ -281,12 +295,15 @@ class ReconfigurableGroup:
                 sum((p.requests for p in live), []),
                 su.concat([p.state for p in live]),
                 jnp.concatenate([p.last for p in live], axis=0))
-        if target > len(self._parts):
+        if len(target) > len(self._parts):
             self.stats.splits += 1
-        else:
+        elif len(target) < len(self._parts):
             self.stats.fuses += 1
-        if target == 1:
+        else:
+            self.stats.resizes += 1
+        if len(target) == 1:
             self._parts = [merged]
+            self._slots = [self.capacity]
             return
 
         def mk(ids: List[int]) -> Optional[_Group]:
@@ -300,12 +317,18 @@ class ReconfigurableGroup:
             list(range(len(merged.requests))), merged.remaining, target,
             self.acfg.regroup_policy)
         self._parts = [mk(ids) for ids in parts_idx]
+        self._slots = list(target)
 
     # -- introspection (used by the fleet router and telemetry) ----------------
 
     @property
     def ways(self) -> int:
         return len(self._parts)
+
+    @property
+    def topology(self) -> Topology:
+        """The live composition: decode slots per part."""
+        return tuple(self._slots)
 
     @property
     def is_split(self) -> bool:
@@ -334,13 +357,12 @@ class ReconfigurableGroup:
         """
         if self.mode == "fused":
             dynamic = False
-        ways = len(self._parts)
-        # each partition admits new work independently the moment it drains
+        # each partition admits new work independently the moment it
+        # drains, up to its own slot budget
         for i, p in enumerate(self._parts):
             if _group_done(p):
                 self._retire(p)
-                self._parts[i] = self._prefill_wave(self.capacity // ways,
-                                                    now)
+                self._parts[i] = self._prefill_wave(self._slots[i], now)
         live = [p for p in self._parts if p is not None]
         if not live:
             return IDLE
@@ -350,15 +372,15 @@ class ReconfigurableGroup:
                                           self._arrivals.rate(now),
                                           self.capacity)
             # a group can only be partitioned as far as it has requests
-            cap = 1
-            while cap * 2 <= min(self.space.max_ways, rem.size):
-                cap *= 2
-            target = self.controller.observe(fv, max_ways_now=cap)
-            if target != ways:
-                self._reconfigure(target)
+            cap = min(self.space.max_ways, rem.size)
+            self.controller.observe(fv, max_ways_now=cap)
+            desired = self.controller.state.topology
+            if desired != self.topology:
+                self._reconfigure(desired)
                 return RECONF
-        for p in live:
-            self._tick_group(p, self.capacity // len(self._parts), now)
+        for i, p in enumerate(self._parts):
+            if p is not None:
+                self._tick_group(p, self._slots[i], now)
         self.stats.ticks += 1
         return TICKED
 

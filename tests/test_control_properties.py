@@ -2,8 +2,10 @@
 
 Split from test_control.py so the whole-module importorskip (the
 repo's established pattern, cf. test_properties.py) only skips the
-property suite where hypothesis is unavailable.
+property suite where hypothesis is unavailable.  The same contracts are
+pinned with concrete cases in test_topology.py, which always runs.
 """
+import itertools
 import os
 
 import numpy as np
@@ -32,7 +34,9 @@ divergences = st.lists(st.floats(min_value=0.0, max_value=0.95,
 @given(divergences, st.integers(2, 6))
 @settings(max_examples=60, deadline=None)
 def test_hysteresis_dwell_never_toggles_consecutively(divs, dwell):
-    """(a) the dwell makes consecutive-tick topology changes impossible."""
+    """(a) the dwell makes consecutive-tick topology changes impossible
+    for a freshly reconfigured part (all parts reset on the first split
+    from fused, so the whole group is pinned here)."""
     gc = GroupController(ThresholdPolicy(0.3, 0.1), ConfigSpace(8, 2),
                          dwell=dwell)
     prev, prev_changed = 1, False
@@ -49,19 +53,97 @@ remaining_lists = st.lists(
 
 
 @given(st.lists(remaining_lists, min_size=4, max_size=24),
-       st.sampled_from([2, 4]), st.floats(0.0, 0.2))
+       st.sampled_from([2, 4, 8]), st.floats(0.0, 0.2),
+       st.booleans())
 @settings(max_examples=40, deadline=None)
-def test_transitions_always_pass_amortization(batches, max_ways, min_gain):
-    """(b) every applied transition satisfied the ConfigSpace check."""
-    space = ConfigSpace(capacity=8, max_ways=max_ways, min_gain=min_gain)
+def test_transitions_always_pass_amortization(batches, max_ways, min_gain,
+                                              hetero):
+    """(b) every applied move is a single-step lattice neighbor that
+    satisfied the ConfigSpace per-part amortization check."""
+    space = ConfigSpace(capacity=8, max_ways=max_ways, min_gain=min_gain,
+                        hetero=hetero)
     gc = GroupController(OraclePolicy(space=space, margin=0.01), space,
                          dwell=1)
     for rem in batches:
         gc.observe(fv_of(rem))
     for _step, frm, to, gain, _reason in gc.state.transitions:
         assert to in space.neighbors(frm)
-        if to > frm:
+        assert space.legal(to)
+        if len(to) >= len(frm):            # split or re-cut must amortize
             assert gain > space.min_gain
+
+
+# -- composition-lattice invariants (the heterogeneous-topology refactor) ------
+
+def brute_force_compositions(capacity, max_parts):
+    out = set()
+    for k in range(1, min(max_parts, capacity) + 1):
+        for cuts in itertools.combinations(range(1, capacity), k - 1):
+            bounds = (0,) + cuts + (capacity,)
+            out.add(tuple(bounds[i + 1] - bounds[i]
+                          for i in range(len(bounds) - 1)))
+    return out
+
+
+@given(st.integers(2, 10), st.integers(1, 10))
+@settings(max_examples=40, deadline=None)
+def test_composition_enumeration_exhaustive(capacity, max_ways):
+    """compositions() is exactly the set of integer compositions of the
+    capacity into at most max_ways parts."""
+    sp = ConfigSpace(capacity=capacity, max_ways=max_ways)
+    got = set(sp.compositions())
+    assert got == brute_force_compositions(capacity, max_ways)
+
+
+@given(st.integers(2, 9), st.integers(2, 9))
+@settings(max_examples=30, deadline=None)
+def test_every_topology_reachable_from_fused(capacity, max_ways):
+    """Every composition is reachable from fused via single-part moves."""
+    sp = ConfigSpace(capacity=capacity, max_ways=max_ways)
+    seen = {(capacity,)}
+    frontier = [(capacity,)]
+    while frontier:
+        nxt = []
+        for t in frontier:
+            for nb in sp.neighbors(t):
+                if nb not in seen:
+                    seen.add(nb)
+                    nxt.append(nb)
+        frontier = nxt
+    assert seen == set(sp.compositions())
+
+
+@given(st.lists(st.floats(min_value=0.0, max_value=1e3, allow_nan=False),
+                min_size=2, max_size=8),
+       st.integers(2, 8),
+       st.sampled_from(["warp_regroup", "direct_split"]))
+@settings(max_examples=80, deadline=None)
+def test_partition_conserves_indices_within_budgets(rem, max_ways, policy):
+    """partition() is a permutation split: every index appears exactly
+    once, no part exceeds its slot budget, and when the batch is large
+    enough no part is left empty (an empty part would price its slots
+    at zero)."""
+    sp = ConfigSpace(capacity=8, max_ways=max_ways)
+    for t in sp.compositions():
+        parts = sp.partition(list(range(len(rem))), rem, t, policy)
+        flat = sorted(i for p in parts for i in p)
+        assert flat == list(range(len(rem)))
+        assert len(parts) == len(t)
+        for s, p in zip(t, parts):
+            assert len(p) <= s
+        if len(rem) >= len(t):
+            assert all(len(p) >= 1 for p in parts)
+
+
+@given(st.lists(st.floats(min_value=1.0, max_value=1e3, allow_nan=False),
+                min_size=2, max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_best_topology_never_worse_than_ladder(rem):
+    """The composition argmax dominates the balanced-ladder argmax."""
+    sp = ConfigSpace(capacity=8, max_ways=8)
+    _, ladder_gain = sp.best_ways(rem)
+    _, comp_gain = sp.best_topology(rem)
+    assert comp_gain >= ladder_gain - 1e-9
 
 
 @pytest.fixture(scope="module")
@@ -87,4 +169,5 @@ def test_predictor_roundtrip_identical_decisions(saved_predictor, seed):
         for ways in (1, 2):
             da, db = a.decide(fv, ways), b.decide(fv, ways)
             assert da.ways == db.ways
+            assert da.topology == db.topology
             assert abs(da.proba - db.proba) < 1e-9

@@ -34,3 +34,8 @@ def test_control_plane_example_runs():
 def test_serve_fleet_example_runs():
     _run("serve_fleet.py", ["--groups", "2", "--capacity", "4",
                             "--horizon", "20"])
+
+
+def test_hetero_topology_example_runs():
+    _run("hetero_topology.py", ["--groups", "2", "--capacity", "4",
+                                "--horizon", "20"])

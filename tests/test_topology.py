@@ -1,0 +1,380 @@
+"""Unit tests for the composition-topology ConfigSpace (no hypothesis).
+
+The property-style invariants also live in test_control_properties.py
+under hypothesis; this file pins the same contracts with concrete cases
+so they run in environments without hypothesis installed.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.control import (ConfigSpace, GroupController, OraclePolicy,
+                           ReplayBuffer, ThresholdPolicy, balanced,
+                           topology_name)
+from repro.control.features import FeatureVector
+from repro.control.policies import OnlinePolicy
+from repro.core import predictor as P
+
+
+def fv_of(remaining, queue=0, rate=0.0, capacity=8):
+    return FeatureVector.from_group(np.asarray(remaining, np.float64),
+                                    queue, rate, capacity)
+
+
+def brute_force_compositions(capacity, max_parts):
+    out = set()
+    for k in range(1, min(max_parts, capacity) + 1):
+        for cuts in itertools.combinations(range(1, capacity), k - 1):
+            bounds = (0,) + cuts + (capacity,)
+            out.add(tuple(bounds[i + 1] - bounds[i]
+                          for i in range(len(bounds) - 1)))
+    return out
+
+
+# -- enumeration ---------------------------------------------------------------
+
+@pytest.mark.parametrize("capacity,max_ways", [(4, 4), (6, 3), (8, 4), (8, 8)])
+def test_composition_enumeration_exhaustive(capacity, max_ways):
+    sp = ConfigSpace(capacity=capacity, max_ways=max_ways)
+    got = set(sp.compositions())
+    assert got == brute_force_compositions(capacity, max_ways)
+    for t in got:
+        assert sum(t) == capacity and all(p >= 1 for p in t)
+        assert len(t) <= max_ways
+
+
+def test_ladder_space_is_the_balanced_special_case():
+    sp = ConfigSpace(capacity=8, max_ways=4, hetero=False)
+    assert sp.compositions() == ((8,), (4, 4), (2, 2, 2, 2))
+    assert not sp.legal((5, 3))
+    assert ConfigSpace(capacity=8, max_ways=4).legal((5, 3))
+
+
+def test_balanced_covers_non_power_of_two():
+    assert balanced(8, 2) == (4, 4)
+    assert balanced(6, 4) == (2, 2, 1, 1)
+    assert balanced(5, 2) == (3, 2)
+    assert sum(balanced(17, 5)) == 17
+
+
+# -- the capacity-waste bug (ISSUE satellite) ----------------------------------
+
+def test_non_power_of_two_capacity_prices_every_slot():
+    """capacity=6, ways=4 used to price 4x1 slots against a fused cost of
+    6 x max — dropping 2 slots and inflating the gain."""
+    sp = ConfigSpace(capacity=6, max_ways=4)
+    rem = [50.0, 50.0, 50.0, 50.0]
+    # a lockstep batch gains nothing from splitting; the old pricing
+    # reported (6*50 - 4*1*50) / (6*50) = 1/3 of phantom gain here
+    assert sp.gain(rem, 4) == pytest.approx(0.0)
+    t = sp.as_topology(4)
+    assert sum(t) == 6 and t == (2, 2, 1, 1)
+    assert sp.slot_cost(rem, 4) == pytest.approx(6 * 50.0)
+    assert topology_name(4, 6) == "2+2+1+1"       # not a lossless-looking 4x1
+    assert topology_name(2, 8) == "2x4"
+
+
+# -- reachability --------------------------------------------------------------
+
+@pytest.mark.parametrize("capacity,max_ways", [(6, 3), (8, 4), (8, 8)])
+def test_every_topology_reachable_from_fused_by_single_moves(capacity,
+                                                             max_ways):
+    sp = ConfigSpace(capacity=capacity, max_ways=max_ways)
+    fused = (capacity,)
+    seen = {fused}
+    frontier = [fused]
+    while frontier:
+        nxt = []
+        for t in frontier:
+            for nb in sp.neighbors(t):
+                assert sp.legal(nb), nb
+                if nb not in seen:
+                    seen.add(nb)
+                    nxt.append(nb)
+        frontier = nxt
+    assert seen == set(sp.compositions())
+
+
+def test_moves_change_part_count_by_a_legal_step():
+    sp = ConfigSpace(capacity=8, max_ways=8)
+    for t in sp.compositions():
+        for nb in sp.split_moves(t):
+            assert len(nb) > len(t) and sum(nb) == 8
+        for nb in sp.fuse_moves(t):
+            assert len(nb) < len(t) and sum(nb) == 8
+        for nb in sp.resize_moves(t):
+            assert len(nb) == len(t) and sum(nb) == 8 and nb != t
+
+
+def test_resize_recuts_a_stale_quarantine():
+    """A (7, 1) cut whose wide part inherited fresh tail work re-shapes
+    to quarantine the new longs — the drifted-mix fix."""
+    sp = ConfigSpace(capacity=8, max_ways=2)
+    drifted = [1.0, 1.0, 1.0, 1.0, 39.0, 39.0, 39.0, 38.0]
+    t = sp.suggest_improve((7, 1), drifted)
+    assert t is not None and len(t) == 2
+    assert sp.slot_cost(drifted, t) < sp.slot_cost(drifted, (7, 1))
+    assert min(t) >= 3                      # the tail needs a wider slice
+    assert (5, 3) in sp.resize_moves((7, 1))
+    assert sp.resize_moves((8,)) == ()      # nothing to re-cut when fused
+    assert ConfigSpace(8, 2, hetero=False).resize_moves((4, 4)) == ()
+    # a resize is a single amortization-checked transition
+    assert sp.transition_ok((7, 1), (5, 3), gain=0.2)
+    assert not sp.transition_ok((7, 1), (5, 3), gain=-0.1)
+
+
+# -- partition conservation ----------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["warp_regroup", "direct_split"])
+def test_partition_conserves_indices_and_respects_budgets(policy):
+    rng = np.random.default_rng(0)
+    sp = ConfigSpace(capacity=8, max_ways=8)
+    for t in sp.compositions():
+        for b in (2, 3, 5, 8):
+            rem = rng.integers(1, 100, b).astype(float)
+            parts = sp.partition(list(range(b)), rem, t, policy)
+            flat = [i for p in parts for i in p]
+            assert sorted(flat) == list(range(b))          # conservation
+            assert len(parts) == len(t)
+            for s, p in zip(t, parts):
+                assert len(p) <= s                         # slot budget
+            if b >= len(t):
+                assert all(len(p) >= 1 for p in parts)     # no stranded part
+
+
+def test_two_way_partition_is_bit_identical_to_regroup_pair():
+    from repro.core.regroup import POLICIES
+    sp = ConfigSpace(capacity=8, max_ways=8)
+    rng = np.random.default_rng(1)
+    for b in (2, 3, 4, 7, 8):
+        rem = rng.integers(0, 120, b).astype(float)
+        for policy in ("warp_regroup", "direct_split"):
+            fast, slow = POLICIES[policy](list(range(b)), rem)
+            assert sp.partition(list(range(b)), rem, (4, 4), policy) \
+                == [fast, slow]
+
+
+# -- skew-aware sizing ---------------------------------------------------------
+
+def test_skewed_tail_prefers_unequal_cut():
+    """The paper's heterogeneous-SM case: 5 short + 3 long requests get
+    the (5, 3) cut, which no equal ladder can express."""
+    sp = ConfigSpace(capacity=8, max_ways=8)
+    rem = [2.0, 2.0, 2.0, 2.0, 2.0, 90.0, 90.0, 90.0]
+    best, gain = sp.best_topology(rem)
+    assert gain > sp.gain(rem, 2) > 0.0          # beats the balanced pair
+    assert len(set(best)) > 1                    # genuinely heterogeneous
+    assert sp.slot_cost(rem, best) < sp.slot_cost(rem, (4, 4))
+    # and (5, 3) itself prices below every equal split
+    for ways in (2, 4, 8):
+        assert sp.slot_cost(rem, (5, 3)) <= sp.slot_cost(rem, ways)
+
+
+def test_no_phantom_gain_from_stranded_slots():
+    """A lockstep 2-request batch must not 'gain' by scattering into 8
+    one-slot parts whose 6 empty slots get priced at zero."""
+    sp = ConfigSpace(capacity=8, max_ways=8)
+    best, gain = sp.best_topology([50.0, 50.0])
+    assert gain == pytest.approx(0.0)
+    assert len(best) <= 2
+    assert sp.gain([50.0, 50.0], (1,) * 8) == 0.0
+    _, ladder_gain = sp.best_ways([50.0, 50.0])
+    assert ladder_gain == pytest.approx(0.0)
+    # and the move suggesters never propose more parts than requests
+    t = sp.suggest_split((8,), [50.0, 50.0])
+    assert t is None or len(t) <= 2
+
+
+def test_drained_group_never_resizes_onto_empty_parts():
+    """A split group that drained below its part count must not 'improve'
+    by shuffling slot budget onto parts that would stay empty."""
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    drained = [90.0, 5.0]                   # 2 live requests, 3 parts
+    assert sp.suggest_improve((2, 2, 4), drained) is None
+    assert sp.move_gain(drained, (2, 2, 4), (2, 4, 2)) == 0.0
+    assert not sp.transition_ok((2, 2, 4), (2, 4, 2),
+                                sp.move_gain(drained, (2, 2, 4), (2, 4, 2)))
+    # with enough live work the same resize is scored on its merits
+    busy = [90.0, 5.0, 80.0, 3.0, 70.0, 2.0, 60.0, 1.0]
+    t = sp.suggest_improve((7, 1), busy)
+    assert t is not None and len(t) <= len(busy)
+
+
+def test_oracle_fuses_back_when_split_edge_shrinks_below_margin():
+    """The fuse-back hysteresis: a split whose gain over fused drops
+    under the margin targets fused again instead of holding forever."""
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    pol = OraclePolicy(space=sp, margin=0.05)
+    nearly_lockstep = fv_of([50.0, 50.0, 50.0, 49.0, 50.0, 50.0, 50.0, 48.0])
+    assert 0.0 < sp.best_topology(nearly_lockstep.remaining)[1] < 0.05
+    d = pol.decide(nearly_lockstep, (4, 4))
+    assert d.ways == 1 and d.topology == (8,)
+
+
+def test_move_gain_is_relative_to_current_topology():
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    rem = [100.0, 5.0, 90.0, 3.0]
+    g_fused_to_pair = sp.move_gain(rem, (8,), (5, 3))
+    assert g_fused_to_pair == pytest.approx(sp.gain(rem, (5, 3)))
+    # a second split from the pair saves less than the first did
+    assert sp.move_gain(rem, (5, 3), (5, 2, 1)) < g_fused_to_pair
+
+
+def test_transition_ok_per_part_moves():
+    sp = ConfigSpace(capacity=8, max_ways=4, min_gain=0.05)
+    assert sp.transition_ok((8,), (5, 3), gain=0.2)
+    assert not sp.transition_ok((8,), (5, 3), gain=0.01)   # under the floor
+    assert not sp.transition_ok((8,), (4, 2, 2), gain=0.9)  # two moves away
+    assert sp.transition_ok((5, 3), (8,), gain=0.0)        # fuse amortizes
+    assert sp.transition_ok((4, 2, 2), (4, 4), gain=0.0)   # neighbor merge
+    assert not sp.transition_ok((2, 4, 2), (4, 4), gain=0.0)  # no single merge
+    assert not sp.transition_ok((5, 3), (5, 3), gain=1.0)
+
+
+def test_best_topology_greedy_matches_enumeration_on_small_space():
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    rem = [2.0, 2.0, 2.0, 40.0, 90.0, 90.0, 3.0, 2.0]
+    t_enum, g_enum = sp.best_topology(rem)
+    # force the greedy path by monkey-ish large threshold: emulate via
+    # neighbors-only hill climb from fused
+    cur, cur_gain = (8,), 0.0
+    for _ in range(8):
+        step = None
+        for nb in sp.neighbors(cur):
+            g = sp.gain(rem, nb)
+            if g > cur_gain + 1e-12:
+                step, cur_gain = nb, g
+        if step is None:
+            break
+        cur = step
+    assert g_enum >= cur_gain - 1e-9
+    assert g_enum >= sp.gain(rem, 2)
+
+
+# -- controller integration ----------------------------------------------------
+
+def test_controller_walks_to_heterogeneous_topology():
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    gc = GroupController(OraclePolicy(space=sp, margin=0.01), sp, dwell=1)
+    skew = fv_of([2.0, 2.0, 2.0, 2.0, 2.0, 90.0, 90.0, 90.0])
+    for _ in range(6):
+        gc.observe(skew)
+    assert gc.state.split
+    # at least one applied move landed on an unequal composition
+    assert any(len(set(to)) > 1 for _, _, to, _, _ in gc.state.transitions)
+    for _step, frm, to, gain, _r in gc.state.transitions:
+        assert to in sp.neighbors(frm)
+        if len(to) > len(frm):
+            assert gain > sp.min_gain
+
+
+def test_per_part_dwell_clocks_are_independent():
+    """A part that just reconfigured blocks its own next move without
+    freezing its siblings."""
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    gc = GroupController(OraclePolicy(space=sp, margin=0.0), sp, dwell=3)
+    st = gc.state
+    st.topology = (4, 4)
+    st.part_ages = [5, 0]               # part 1 just reconfigured
+    assert sp.touched_parts((4, 4), (2, 2, 4)) == (0,)
+    assert sp.touched_parts((4, 4), (4, 2, 2)) == (1,)
+    assert sp.touched_parts((4, 4), (2, 2, 2, 2)) == (0, 1)
+    # ages carry across a move that only touches part 0
+    ages = gc._rebuild_ages((4, 4), (2, 2, 4), [5, 9])
+    assert ages == [0, 0, 9]
+    ages = gc._rebuild_ages((4, 2, 2), (4, 4), [7, 1, 2])
+    assert ages == [7, 0]
+
+
+def test_group_controller_accepts_exact_topology_hint():
+    sp = ConfigSpace(capacity=8, max_ways=4)
+    gc = GroupController(ThresholdPolicy(0.99, 0.0), sp, dwell=1)
+    gc.request_topology((5, 3))
+    skew = fv_of([2.0, 2.0, 2.0, 2.0, 2.0, 90.0, 90.0, 90.0])
+    assert gc.observe(skew) == 2
+    assert gc._hint is None             # retired once the count matched
+
+
+# -- replay recency + drift reset ----------------------------------------------
+
+def test_replay_weighted_dataset_decays_with_age():
+    buf = ReplayBuffer(maxlen=64)
+    for i in range(32):
+        buf.add(np.full(5, float(i)), float(i % 2))
+    X, y, w = buf.weighted_dataset(half_life=8)
+    assert w[-1] == pytest.approx(1.0)
+    assert w[-9] == pytest.approx(0.5)          # one half-life older
+    assert np.all(np.diff(w) > 0)               # strictly fresher = heavier
+    X2, y2, w2 = buf.weighted_dataset(None)
+    assert np.all(w2 == 1.0)
+
+
+def test_replay_reset_keeps_newest_window():
+    buf = ReplayBuffer(maxlen=64)
+    for i in range(40):
+        buf.add(np.full(5, float(i)), 1.0)
+    buf.reset(keep_last=8)
+    assert len(buf) == 8
+    X, _ = buf.dataset()
+    assert X[0, 0] == 32.0 and X[-1, 0] == 39.0
+    buf.reset()
+    assert len(buf) == 0
+
+
+def test_online_policy_drift_reset_forgets_stale_regime():
+    """After a regime flip the drift check drops the stale buffer and the
+    policy falls back to its threshold bootstrap instead of riding a
+    wrong model for replay_capacity samples."""
+    rng = np.random.default_rng(0)
+    buf = ReplayBuffer(maxlen=1024)
+    pol = OnlinePolicy(replay=buf, refit_every=16, min_samples=32,
+                       train_steps=150, drift_window=24,
+                       drift_threshold=0.6)
+    # regime A: feature 0 high => split wins
+    for _ in range(128):
+        x = rng.normal(size=5)
+        buf.add(x, 1.0 if x[0] > 0 else 0.0)
+    assert pol.maybe_refit() and pol.fitted
+    # regime B: the relationship inverts
+    for _ in range(48):
+        x = rng.normal(size=5)
+        buf.add(x, 0.0 if x[0] > 0 else 1.0)
+    assert pol.drift_detected()
+    pol.maybe_refit()                    # the refit path routes to reset
+    assert pol.drift_resets == 1
+    assert not pol.fitted                # back to bootstrap
+    assert len(buf) == pol.drift_window
+
+
+def test_train_logistic_sample_weight_steers_fit():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(256, 2))
+    y_new = (X[:, 0] > 0).astype(float)
+    y_old = 1.0 - y_new
+    # first half labeled by the stale rule, second half by the fresh one
+    y = np.concatenate([y_old[:128], y_new[128:]])
+    w_fresh = np.concatenate([np.full(128, 1e-3), np.ones(128)])
+    m_flat, _ = P.train_logistic(X, y, steps=200)
+    m_fresh, _ = P.train_logistic(X, y, steps=200, sample_weight=w_fresh)
+    acc = lambda m: float(np.mean(
+        (np.asarray(P.predict_proba(m, X[128:])) > 0.5) == (y_new[128:] > .5)))
+    assert acc(m_fresh) > 0.9 > acc(m_flat) + 0.2
+
+
+# -- feature ablation ----------------------------------------------------------
+
+def test_serve_feature_ablation_reports_every_feature():
+    from repro.control import (SERVE_FEATURES, build_serve_corpus,
+                               serve_feature_ablation,
+                               train_serve_predictor)
+    X, y = build_serve_corpus(n_samples=256, seed=0)
+    model, _ = train_serve_predictor(n_samples=256, steps=200, seed=0)
+    abl = serve_feature_ablation(model, X, y, steps=120)
+    assert set(abl) == set(SERVE_FEATURES)
+    for row in abl.values():
+        assert {"mean_abs_impact", "drop_one_accuracy",
+                "accuracy_cost"} <= set(row)
+    # divergence is the paper's dominant signal at the serve level too
+    top = max(abl, key=lambda k: abl[k]["mean_abs_impact"])
+    assert top in ("divergence", "spread")
