@@ -26,6 +26,13 @@ moves (``(5, 3)``-style cuts).  Validation records whether
 heterogeneous topologies beat the best equal ladder on p99 latency or
 slot efficiency, plus the compositions actually visited.
 
+**Work-stealing sweep** — the chip-level migration subsystem
+(``repro.fleet.migrate``): identical shard-skewed traces
+(``imbalanced_trace`` — one hot router shard hammers one group under
+sticky routing) replayed with cross-group stealing disabled and
+enabled at equal capacity.  Validation records the p99 speedup and the
+steal/live-migration/stall counters.
+
 All runs replay byte-identical traces (same seed) and share one compiled
 decode, so differences are purely scheduling.  Results (slot-step
 efficiency, p50/p95/p99 request latency, throughput, churn, utilization,
@@ -102,6 +109,61 @@ def composition_sweep(cfg, params, rt, decode, *, groups: int,
     return out
 
 
+def work_stealing_sweep(cfg, params, rt, decode, *, groups: int,
+                        capacity: int, horizon: int, seed: int) -> Dict:
+    """Cross-group work stealing on a shard-skewed trace, on vs off.
+
+    Both runs use sticky (shard-affinity) routing on the imbalanced
+    trace — one hot shard hammers one group while the rest starve —
+    at equal capacity; the only difference is whether the
+    ``repro.fleet.migrate`` planner may steal queued requests (and
+    live-migrate KV-costed tails) across groups.
+    """
+    from repro.configs.base import AmoebaConfig, FleetConfig, MigrationConfig
+    from repro.fleet import FleetEngine, imbalanced_trace
+
+    amoeba = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                          min_phase_steps=2)
+    variants = {"no_stealing": MigrationConfig(enabled=False),
+                "stealing": MigrationConfig(enabled=True)}
+    out: Dict = {}
+    for label, mig in variants.items():
+        trace = imbalanced_trace(horizon=horizon, vocab_size=cfg.vocab_size,
+                                 seed=seed, shards=groups)
+        eng = FleetEngine(cfg, params, rt=rt, decode_fn=decode,
+                          fleet=FleetConfig(
+                              num_groups=groups, capacity=capacity,
+                              router="sticky", mode="dynamic",
+                              rebalance_every=4, migrate=mig,
+                              amoeba=amoeba))
+        eng.submit(trace)
+        s = eng.run()
+        if s["completed"] != len(trace):
+            raise RuntimeError(f"{label}: completed {s['completed']} of "
+                               f"{len(trace)} requests")
+        out[label] = s
+        lat = s["latency"]
+        mig_s = s.get("migration", {})
+        print(f"{label:12s} ticks={s['wall_ticks']:4d} "
+              f"p50={lat['p50']:5.1f} p99={lat['p99']:5.1f} "
+              f"steals={mig_s.get('steals', 0)} "
+              f"live={mig_s.get('live_migrations', 0)} "
+              f"stall={mig_s.get('stall_ticks', 0)}")
+    off, on = out["no_stealing"], out["stealing"]
+    mig_s = on.get("migration", {})
+    out["validation"] = {
+        "steal_p99_speedup": round(
+            off["latency"]["p99"] / max(on["latency"]["p99"], 1e-9), 3),
+        "stealing_beats_no_stealing": bool(
+            on["latency"]["p99"] < off["latency"]["p99"]),
+        "steals": mig_s.get("steals", 0),
+        "live_migrations": mig_s.get("live_migrations", 0),
+        "stall_ticks": mig_s.get("stall_ticks", 0),
+        "rejected_amortization": mig_s.get("rejected_amortization", 0),
+    }
+    return out
+
+
 def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
                 seed: int = 0, out_path: str = OUT) -> Dict:
     import jax
@@ -163,8 +225,14 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
         + f"  (dominant: {top_feat})")
 
     print("\n== composition sweep (heterogeneous vs equal ladders) ==")
+    decode = make_decode_fn(cfg, rt)
     out["composition_sweep"] = composition_sweep(
-        cfg, params, rt, make_decode_fn(cfg, rt), groups=groups,
+        cfg, params, rt, decode, groups=groups,
+        capacity=capacity, horizon=horizon, seed=seed)
+
+    print("\n== work-stealing sweep (imbalanced trace, sticky routing) ==")
+    out["work_stealing"] = work_stealing_sweep(
+        cfg, params, rt, decode, groups=groups,
         capacity=capacity, horizon=horizon, seed=seed)
 
     dyn, fus = out["amoeba_dynamic"], out["static_fused"]
@@ -211,6 +279,10 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
           f"p99 {cv['hetero_p99_speedup_vs_equal']:.2f}x, "
           f"efficiency {cv['hetero_efficiency_gain_vs_equal']:.2f}x, "
           f"wins either: {cv['hetero_beats_equal']}")
+    wv = out["work_stealing"]["validation"]
+    print(f"stealing vs no-stealing: p99 {wv['steal_p99_speedup']:.2f}x, "
+          f"steals={wv['steals']} live={wv['live_migrations']}, "
+          f"wins: {wv['stealing_beats_no_stealing']}")
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {os.path.abspath(out_path)}")

@@ -273,6 +273,37 @@ class AmoebaConfig:
 
 
 @dataclass(frozen=True)
+class MigrationConfig:
+    """Chip-level work stealing and KV-costed request migration.
+
+    Knobs for :class:`repro.fleet.migrate.MigrationPlanner`.  Queue
+    steals move *queued* requests from an overflowing group to a
+    starving group's best-fitting part (no state travels, only the
+    prompt).  Live migrations move *in-flight* requests with their
+    decode state; the KV transfer is priced by
+    :class:`repro.fleet.migrate.KVTransferCost` — bytes follow from the
+    request's sequence length and the model config, the configured
+    ``link_bandwidth`` converts them into stall ticks charged to the
+    destination part — and the move must clear ``min_gain`` on the same
+    normalized move-gain scale the topology lattice uses.
+    """
+    enabled: bool = False
+    # plan cadence in wall ticks when FleetConfig.rebalance_every == 0
+    # (when rebalancing is on, plans ride the rebalance tick instead)
+    every: int = 4
+    steal_threshold: int = 2        # donor queue depth that opens stealing
+    max_steals: int = 4             # queue steals per plan tick
+    live: bool = True               # allow KV-costed live migrations
+    max_live: int = 1               # live migrations per plan tick
+    link_bandwidth: float = 4e9     # KV bytes per wall tick over the link
+    kv_dtype_bytes: int = 2         # bf16 KV cache entries
+    min_gain: float = 0.02          # amortization floor (move_gain scale)
+
+    def replace(self, **kw) -> "MigrationConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class FleetConfig:
     """A serving fleet of N independently reconfigurable pairs.
 
@@ -284,13 +315,19 @@ class FleetConfig:
     num_groups: int = 4
     capacity: int = 8               # decode slots per pair (fused width)
     window: int = 256               # KV window passed to prefill
-    router: str = "least_loaded"    # round_robin | least_loaded | length_aware
+    # round_robin | least_loaded | length_aware | sticky
+    router: str = "least_loaded"
     mode: str = "dynamic"           # dynamic | fused | split
     long_threshold: int = 24        # length_aware: predicted-long cutoff
     telemetry_window: int = 256     # rolling-stat window, wall ticks
     # chip-level FleetController: re-evaluate the fleet's split mix every
     # N wall ticks (0 = no chip-wide rebalancing; groups act alone)
     rebalance_every: int = 0
+    # cross-group work stealing / live migration (repro.fleet.migrate)
+    migrate: MigrationConfig = MigrationConfig()
+    # reserve a 1-slot quarantine part on this group (exact-composition
+    # fleet hint); reserved parts are steal-ineligible for the planner
+    quarantine_group: Optional[int] = None
     amoeba: AmoebaConfig = AmoebaConfig()
 
     def replace(self, **kw) -> "FleetConfig":

@@ -81,10 +81,12 @@ class GroupController:
         """Chip-level hint: move toward ``t`` when dwell next allows.
 
         ``t`` may be a part count (the fleet's usual nudge) or an exact
-        composition.  The hint flows through the same transition path as
-        policy proposals (one move per decision tick, amortization-
-        checked), so a fleet rebalance can never bypass the group's own
-        safeguards.
+        composition (e.g. the ``(C-1, 1)`` quarantine reservation).  The
+        hint flows through the same transition path as policy proposals
+        (one move per decision tick, dwell-checked), so a fleet rebalance
+        can never bypass the group's own pacing.  An exact-composition
+        hint retires only when the group holds *exactly* that topology;
+        a part-count hint retires on reaching the count.
         """
         self._hint = t if self.space.legal(t) else None
 
@@ -93,8 +95,13 @@ class GroupController:
             return False
         if isinstance(self._hint, int):
             return self.state.ways == self._hint
-        return self.state.topology == tuple(self._hint) \
-            or self.state.ways == len(self._hint)
+        return self.state.topology == self.space.as_topology(self._hint)
+
+    def _hint_exact(self, target: Topology) -> bool:
+        """Is ``target`` the exact composition a fleet hint asked for?"""
+        return (self._hint is not None
+                and not isinstance(self._hint, int)
+                and target == self.space.as_topology(self._hint))
 
     # -- the decision tick ----------------------------------------------------
 
@@ -135,8 +142,14 @@ class GroupController:
             gain = d.gain if d.topology == target else self._move_gain(
                 fv, st.topology, target, d.gain)
             touched = self.space.touched_parts(st.topology, target)
-            if self.space.transition_ok(st.topology, target, gain) \
-                    and all(st.part_ages[i] >= self.dwell for i in touched):
+            ok = self.space.transition_ok(st.topology, target, gain)
+            if not ok and self._hint_exact(target):
+                # a reservation's value (tenant isolation) lies outside
+                # the slot-cost model, so an exact fleet hint skips the
+                # min-gain floor — but must still be a legal single move
+                # and (below) clear every touched part's dwell clock
+                ok = target in self.space.neighbors(st.topology)
+            if ok and all(st.part_ages[i] >= self.dwell for i in touched):
                 st.transitions.append((st.step, st.topology, target, gain,
                                        d.reason))
                 st.part_ages = self._rebuild_ages(st.topology, target,
@@ -197,6 +210,18 @@ class GroupController:
     def _proposal(self, fv: FeatureVector) -> Decision:
         if self._hint is not None and not self._hint_reached():
             cur = self.state.topology
+            if not isinstance(self._hint, int):
+                want_t = self.space.as_topology(self._hint)
+                if want_t in self.space.neighbors(cur):
+                    gain = self._move_gain(fv, cur, want_t, fv.divergence)
+                    return Decision(len(want_t), topology=want_t, gain=gain,
+                                    reason="fleet rebalance")
+                # not single-move reachable yet: fall through to the
+                # part-count nudge and converge over later ticks
+                if len(want_t) == len(cur):
+                    # same part count but a different cut, and no single
+                    # re-cut reaches it — let the policy act this tick
+                    return self.policy.decide(fv, self.state.topology)
             want = n_parts(self._hint)
             if want > len(cur):
                 t = self.space.suggest_split(cur, fv.remaining,
@@ -231,13 +256,53 @@ class FleetController:
 
     def __init__(self, long_threshold: int = 24, every: int = 16,
                  min_split: int = 0, max_split: Optional[int] = None,
-                 deepen_threshold: float = 0.5):
+                 deepen_threshold: float = 0.5,
+                 planner=None, quarantine: Optional[int] = None,
+                 mix: bool = True):
         self.long_threshold = long_threshold
         self.every = max(every, 1)
         self.min_split = min_split
         self.max_split = max_split
         self.deepen_threshold = deepen_threshold
+        # optional repro.fleet.migrate.MigrationPlanner: plans gathered
+        # on the rebalance tick, executed by the engine between ticks
+        self.planner = planner
+        # group index holding the reserved (C-1, 1) quarantine slice
+        self.quarantine = quarantine
+        # False = skip split-mix nudging (migration/quarantine only)
+        self.mix = mix
         self.rebalances = 0
+        self._plans: list = []
+
+    # -- quarantine reservation ------------------------------------------------
+
+    def reserved_parts(self, groups: Sequence) -> set:
+        """Live ``(group, part)`` reservations — steal-ineligible."""
+        out = set()
+        q = self.quarantine
+        if q is not None and 0 <= q < len(groups):
+            topo = groups[q].controller.state.topology
+            if len(topo) >= 2 and topo[-1] == 1:
+                out.add((q, len(topo) - 1))
+        return out
+
+    def _maintain_quarantine(self, groups: Sequence) -> int:
+        """Re-assert the exact-composition reservation when it drifted."""
+        g = groups[self.quarantine]
+        topo = g.controller.state.topology
+        cap = g.controller.space.capacity
+        want = (cap - 1, 1)
+        if cap < 2 or (len(topo) >= 2 and topo[-1] == 1):
+            return 0
+        if not g.controller.space.legal(want):
+            return 0
+        g.controller.request_topology(want)
+        return 1
+
+    def take_plans(self) -> list:
+        """Hand the engine this tick's migration plans (drains them)."""
+        plans, self._plans = self._plans, []
+        return plans
 
     def desired_split_groups(self, long_frac: float, n_groups: int) -> int:
         # round up: any long-tail mass deserves at least one split group
@@ -254,15 +319,31 @@ class FleetController:
             else 1.0 - rem.mean() / rem.max()
 
     def rebalance(self, tick: int, groups: Sequence) -> int:
-        """Nudge the fleet's split mix; returns hints issued this call.
+        """One chip-level control tick; returns hints issued this call.
 
-        ``groups`` are serving groups exposing ``controller``
-        (a :class:`GroupController`), ``live_requests()``, ``queue`` and
+        Re-asserts the quarantine reservation, nudges the split mix
+        (unless ``mix`` is off), and — when a migration planner is
+        wired — gathers this tick's steal/migration plans for the
+        engine to pick up via :meth:`take_plans`.  ``groups`` are
+        serving groups exposing ``controller`` (a
+        :class:`GroupController`), ``live_requests()``, ``queue`` and
         ``load()`` — the :class:`repro.serve.engine.ReconfigurableGroup`
         surface.
         """
         if tick % self.every != 0:
             return 0
+        issued = 0
+        if self.quarantine is not None \
+                and 0 <= self.quarantine < len(groups):
+            issued += self._maintain_quarantine(groups)
+        issued += self._rebalance_mix(groups) if self.mix else 0
+        if self.planner is not None:
+            self._plans = self.planner.plan(
+                tick, groups, reserved=self.reserved_parts(groups))
+        self.rebalances += issued > 0
+        return issued
+
+    def _rebalance_mix(self, groups: Sequence) -> int:
         total, long_n = 0, 0
         for g in groups:
             for r in g.live_requests():
@@ -274,9 +355,14 @@ class FleetController:
         if total == 0:
             return 0
         long_frac = long_n / total
-        want = self.desired_split_groups(long_frac, len(groups))
-        split = [g for g in groups if g.controller.state.split]
-        fused = [g for g in groups if not g.controller.state.split]
+        # the quarantine group's composition is reserved — mix nudges
+        # must not fight the standing exact-composition hint
+        pool = [g for i, g in enumerate(groups) if i != self.quarantine]
+        if not pool:
+            return 0
+        want = self.desired_split_groups(long_frac, len(pool))
+        split = [g for g in pool if g.controller.state.split]
+        fused = [g for g in pool if not g.controller.state.split]
         issued = 0
         if len(split) < want:
             # split the most divergent fused groups first
@@ -301,5 +387,4 @@ class FleetController:
                     g.controller.request_topology(deeper)
                     issued += 1
                     break
-        self.rebalances += issued > 0
         return issued

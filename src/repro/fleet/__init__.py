@@ -2,18 +2,25 @@
 
 ``repro.serve`` models one SM pair; this package scales it to a fleet of
 N independently reconfigurable pairs behind a request router, fed by
-trace-driven workloads and measured by fleet-wide telemetry.
+trace-driven workloads, rebalanced by cross-group work stealing and
+KV-costed live migration (``repro.fleet.migrate``), and measured by
+fleet-wide telemetry.
 """
+from repro.fleet.migrate import (KVTransferCost, Migration,
+                                 MigrationPlanner)
 from repro.fleet.scheduler import (DEFAULT_MODES, ROUTERS, FleetEngine,
                                    replay_modes, replay_policies)
 from repro.fleet.telemetry import FleetTelemetry, RollingWindow
 from repro.fleet.traffic import (TenantProfile, bursty_longtail_trace,
-                                 make_trace, poisson_trace,
-                                 skewed_longtail_trace, uniform_trace)
+                                 imbalanced_trace, make_trace,
+                                 poisson_trace, skewed_longtail_trace,
+                                 uniform_trace)
 
 __all__ = [
     "FleetEngine", "ROUTERS", "DEFAULT_MODES", "replay_modes",
     "replay_policies", "FleetTelemetry", "RollingWindow",
+    "KVTransferCost", "Migration", "MigrationPlanner",
     "TenantProfile", "make_trace", "poisson_trace",
-    "bursty_longtail_trace", "skewed_longtail_trace", "uniform_trace",
+    "bursty_longtail_trace", "skewed_longtail_trace",
+    "imbalanced_trace", "uniform_trace",
 ]

@@ -30,7 +30,18 @@ Routing policies (pluggable via ``FleetConfig.router`` or the
 * ``length_aware``  — the heterogeneous-SM assignment: predicted-long
   requests go to already-split groups (whose slow halves quarantine
   tails), short requests prefer fused groups (which drain lockstep
-  batches at full width); ties fall back to least-loaded.
+  batches at full width); ties fall back to least-loaded, then
+  least-recently-assigned.
+* ``sticky``        — ``Request.shard`` pins the group (session/cache
+  affinity); the imbalance regime ``repro.fleet.migrate`` exists for.
+
+Routers address ``(group, part)`` — the same scheme migration steals
+use — so a length-aware admission can target the narrowest quarantine
+slice directly; the part half is a soft affinity the group honors under
+contention.  When ``FleetConfig.migrate.enabled``, the chip-level
+``FleetController`` additionally gathers work-stealing and KV-costed
+live-migration plans each rebalance tick and the engine executes them
+between decode ticks (see :mod:`repro.fleet.migrate`).
 
 All pairs share one jitted ``decode_step`` (same params, same model), so
 the XLA compile cache is shared across the fleet exactly as the paper's
@@ -45,6 +56,7 @@ from repro.configs.base import FleetConfig, ModelConfig
 from repro.control import ConfigSpace, FleetController, make_policy
 from repro.control.policies import ReconfigPolicy
 from repro.core.predictor import LogisticModel
+from repro.fleet.migrate import MigrationPlanner, fit_part
 from repro.fleet.telemetry import FleetTelemetry
 from repro.models import transformer as T
 from repro.serve.engine import (IDLE, TICKED, ReconfigurableGroup, Request,
@@ -52,23 +64,46 @@ from repro.serve.engine import (IDLE, TICKED, ReconfigurableGroup, Request,
 
 
 # -- routing policies ----------------------------------------------------------
-# signature: (request, groups, state) -> group index; ``state`` is a dict the
-# policy may use to persist across calls (e.g. the round-robin cursor).
+# signature: (request, groups, state) -> (group index, part index | None);
+# ``state`` is a dict the policy may use to persist across calls (the
+# round-robin cursor, the least-recently-assigned tie-break clocks).  The
+# part index is the same (group, part) addressing scheme migration steals
+# use, so admissions and steals target parts uniformly; legacy routers
+# returning a bare group index are still accepted by the engine.
+
+def _mark_assigned(state: Dict, gi: int) -> None:
+    """Stamp ``gi`` as most-recently-assigned for the LRU tie-break."""
+    seq = state.get("assign_seq", 0) + 1
+    state["assign_seq"] = seq
+    state.setdefault("last_assigned", {})[gi] = seq
+
+
+def _lru(state: Dict, gi: int) -> int:
+    """Tie-break key: least-recently-assigned group wins.
+
+    Breaking ties by group index biased steady-state load onto low-index
+    groups (every tie went to group 0); the LRU clock rotates them.
+    """
+    return state.get("last_assigned", {}).get(gi, -1)
+
 
 def route_round_robin(req: Request, groups: Sequence[ReconfigurableGroup],
-                      state: Dict) -> int:
+                      state: Dict):
     i = (state.get("rr", -1) + 1) % len(groups)
     state["rr"] = i
-    return i
+    return i, None
 
 
 def route_least_loaded(req: Request, groups: Sequence[ReconfigurableGroup],
-                       state: Dict) -> int:
-    return min(range(len(groups)), key=lambda i: (groups[i].load(), i))
+                       state: Dict):
+    gi = min(range(len(groups)),
+             key=lambda i: (groups[i].load(), _lru(state, i), i))
+    _mark_assigned(state, gi)
+    return gi, None
 
 
 def route_length_aware(req: Request, groups: Sequence[ReconfigurableGroup],
-                       state: Dict) -> int:
+                       state: Dict):
     """Bin by predicted length onto the heterogeneous group mix.
 
     Predicted-long requests go to split groups, preferring the one whose
@@ -76,7 +111,9 @@ def route_length_aware(req: Request, groups: Sequence[ReconfigurableGroup],
     request in an s-slot part wastes s x length slot-steps, so the
     narrowest fitting part wins); short requests prefer fused groups and,
     among them, the widest lockstep slice.  Ties fall back to
-    least-loaded.
+    least-loaded, then least-recently-assigned.  Returns the chosen
+    ``(group, part)`` — the part the fit logic picked, as a soft
+    affinity the group honors under contention.
     """
     thresh = state.get("long_threshold", FleetConfig.long_threshold)
     is_long = req.max_new_tokens >= thresh
@@ -89,14 +126,34 @@ def route_length_aware(req: Request, groups: Sequence[ReconfigurableGroup],
             return 0
         return min(topo) if is_long and len(topo) > 1 else -max(topo)
 
-    return min(pool, key=lambda i: (part_fit(groups[i]),
-                                    groups[i].load(), i))
+    gi = min(pool, key=lambda i: (part_fit(groups[i]), groups[i].load(),
+                                  _lru(state, i), i))
+    _mark_assigned(state, gi)
+    topo = getattr(groups[gi], "topology", None)
+    if not topo or len(topo) < 2:
+        return gi, None
+    return gi, fit_part(topo, is_long)
+
+
+def route_sticky(req: Request, groups: Sequence[ReconfigurableGroup],
+                 state: Dict):
+    """Shard-affinity routing: ``Request.shard`` pins the group.
+
+    The session/cache-affinity pattern that creates the imbalance the
+    migration planner exists to fix — a hot shard's group overflows
+    while its neighbors starve.  Unsharded requests fall back to
+    least-loaded.
+    """
+    if req.shard is not None:
+        return req.shard % len(groups), None
+    return route_least_loaded(req, groups, state)
 
 
 ROUTERS: Dict[str, Callable] = {
     "round_robin": route_round_robin,
     "least_loaded": route_least_loaded,
     "length_aware": route_length_aware,
+    "sticky": route_sticky,
 }
 
 
@@ -161,10 +218,35 @@ class FleetEngine:
             for i in range(fleet.num_groups)]
         self._router = ROUTERS[fleet.router]
         self._router_state: Dict = {"long_threshold": fleet.long_threshold}
+        if fleet.quarantine_group is not None and not (
+                0 <= fleet.quarantine_group < fleet.num_groups):
+            raise ValueError(
+                f"quarantine_group {fleet.quarantine_group} out of range "
+                f"for {fleet.num_groups} groups")
+        if fleet.mode != "dynamic" and (fleet.migrate.enabled
+                                        or fleet.quarantine_group is not None):
+            # the chip-level control loop only runs on dynamic fleets;
+            # fail loudly rather than report all-zero steal counters
+            raise ValueError(
+                "migrate.enabled / quarantine_group need mode='dynamic' "
+                f"(got mode={fleet.mode!r})")
+        self.planner = MigrationPlanner(
+            fleet.migrate, model_cfg,
+            long_threshold=fleet.long_threshold,
+            window=fleet.window) if fleet.migrate.enabled else None
+        # the chip-level controller runs whenever any chip-wide concern
+        # exists: split-mix rebalancing, migration planning, or a
+        # quarantine reservation to maintain
+        need_controller = (fleet.rebalance_every > 0
+                           or self.planner is not None
+                           or fleet.quarantine_group is not None)
         self.controller = FleetController(
             long_threshold=fleet.long_threshold,
-            every=fleet.rebalance_every) if fleet.rebalance_every > 0 \
-            else None
+            every=fleet.rebalance_every if fleet.rebalance_every > 0
+            else max(fleet.migrate.every, 1),
+            planner=self.planner,
+            quarantine=fleet.quarantine_group,
+            mix=fleet.rebalance_every > 0) if need_controller else None
         self.requests: List[Request] = []
         # min-heap of (arrival, seq, request): O(log n) per submit, and the
         # monotone seq keeps delivery FIFO-stable within an arrival tick
@@ -194,8 +276,9 @@ class FleetEngine:
                     (arrival, seq, self._last_delivered)
             self._last_delivered = (arrival, seq)
             r.arrival = max(r.arrival, 0)
-            gi = self._router(r, self.groups, self._router_state)
-            self.groups[gi].submit([r], now=self.wall)
+            dest = self._router(r, self.groups, self._router_state)
+            gi, pi = dest if isinstance(dest, tuple) else (dest, None)
+            self.groups[gi].submit([r], now=self.wall, part=pi)
 
     # -- main loop ----------------------------------------------------------------
 
@@ -207,6 +290,11 @@ class FleetEngine:
             if self.controller is not None and dynamic \
                     and self.fleet.mode == "dynamic":
                 self.controller.rebalance(self.wall, self.groups)
+                plans = self.controller.take_plans()
+                if plans:
+                    # execute between ticks: steals re-queue, live
+                    # migrations splice KV rows before anyone decodes
+                    self.planner.execute(plans, self.groups, now=self.wall)
             statuses = [g.step(dynamic=dynamic, now=self.wall)
                         for g in self.groups]
             ticked = sum(s == TICKED for s in statuses)

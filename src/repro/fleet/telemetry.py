@@ -10,7 +10,10 @@ quantities the benchmarks compare:
 * request latency percentiles (p50/p95/p99, per tenant too),
 * throughput (tokens and requests per wall tick, plus a rolling window),
 * reconfiguration churn (splits+fuses per kilotick),
-* utilization (fraction of group-ticks that decoded).
+* utilization (fraction of group-ticks that decoded),
+* migration traffic (queue steals, live migrations, KV-transfer stall
+  ticks — per group in :class:`GroupSnapshot` and fleet-wide in the
+  ``migration`` summary block when a planner is wired).
 
 It also hosts the control plane's :class:`~repro.control.ReplayBuffer`:
 every group's ``GroupController`` logs one (features, realized-win)
@@ -71,6 +74,12 @@ class GroupSnapshot:
             "splits": self.stats.splits, "fuses": self.stats.fuses,
             "resizes": getattr(self.stats, "resizes", 0),
             "completed": self.stats.completed,
+            # cross-group migration (repro.fleet.migrate)
+            "stall_ticks": getattr(self.stats, "stall_ticks", 0),
+            "steals_in": getattr(self.stats, "steals_in", 0),
+            "steals_out": getattr(self.stats, "steals_out", 0),
+            "migrations_in": getattr(self.stats, "migrations_in", 0),
+            "migrations_out": getattr(self.stats, "migrations_out", 0),
         }
 
 
@@ -197,7 +206,17 @@ class FleetTelemetry:
                     control["last_refit"] = policy.refit_info[-1]
         if fleet_controller is not None:
             control["fleet_rebalances"] = fleet_controller.rebalances
+            reserved = getattr(fleet_controller, "reserved_parts", None)
+            if reserved is not None and fleet_controller.quarantine is not None:
+                control["reserved_parts"] = sorted(
+                    list(a) for a in reserved(groups))
         out["control"] = control
+        planner = getattr(fleet_controller, "planner", None)
+        if planner is not None:
+            mig = planner.summary()
+            mig["stall_ticks"] = sum(
+                getattr(g.stats, "stall_ticks", 0) for g in groups)
+            out["migration"] = mig
         tenants = sorted({r.tenant for r in requests})
         if len(tenants) > 1:
             out["per_tenant"] = {}

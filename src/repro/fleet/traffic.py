@@ -47,6 +47,8 @@ class TenantProfile:
     burst_factor: float = 1.0          # >1 turns on on/off modulation
     burst_period: int = 64             # ticks per on/off cycle
     burst_duty: float = 0.25           # fraction of the period at burst rate
+    # router shard for sticky (affinity) routing; None = unsharded
+    shard: "int | None" = None
 
     def intensity(self, tick: int) -> float:
         if self.burst_factor <= 1.0:
@@ -83,7 +85,7 @@ def make_trace(profiles: Sequence[TenantProfile], horizon: int,
                 out.append(Request(
                     rid=0, prompt=prompt,
                     max_new_tokens=prof.sample_length(rng),
-                    tenant=prof.name, arrival=tick))
+                    tenant=prof.name, arrival=tick, shard=prof.shard))
     out.sort(key=lambda r: r.arrival)
     for i, r in enumerate(out):
         r.rid = i
@@ -146,6 +148,36 @@ def skewed_longtail_trace(horizon: int, vocab_size: int, seed: int = 0,
         mean_tokens=40.0, sigma=0.5, max_tokens=120,
         prompt_lengths=(16,))
     return make_trace([skew, drizzle], horizon, vocab_size, seed)
+
+
+def imbalanced_trace(horizon: int, vocab_size: int, seed: int = 0,
+                     shards: int = 4, hot_shard: int = 0,
+                     hot_rate: float = 0.9, cold_rate: float = 0.05,
+                     p_long: float = 0.3) -> List[Request]:
+    """Shard-skewed load: one router shard takes nearly all the traffic.
+
+    Every tenant is pinned to a shard (``Request.shard``, honored by the
+    ``sticky`` router), but the arrival mass hammers ``hot_shard``: a
+    bursty tenant with a fat long tail, while the other shards trickle
+    short turns.  Under sticky routing the hot shard's group overflows
+    while its neighbors starve — the imbalance regime
+    ``repro.fleet.migrate``'s work stealing exists to fix, used by the
+    work-stealing sweep in ``benchmarks/fleet_bench.py``.
+    """
+    profs = []
+    for s in range(shards):
+        hot = s == hot_shard
+        profs.append(TenantProfile(
+            name=f"shard{s}",
+            rate=hot_rate if hot else cold_rate,
+            length_dist="bimodal",
+            short_tokens=3,
+            long_tokens=48 if hot else 12,
+            p_long=p_long if hot else 0.1,
+            burst_factor=3.0 if hot else 1.0,
+            burst_period=50, burst_duty=0.3,
+            shard=s))
+    return make_trace(profs, horizon, vocab_size, seed)
 
 
 def uniform_trace(rate: float, horizon: int, vocab_size: int,

@@ -63,6 +63,11 @@ class Request:
     tenant: str = "default"
     arrival: int = 0                   # wall tick the request entered the system
     finish: Optional[int] = None       # wall tick the last token was generated
+    # router shard for sticky (affinity) routing; None = unsharded
+    shard: Optional[int] = None
+    # soft preference for one part of the admitting group (set by
+    # part-addressable routing and by migration steals); cleared on admit
+    part_affinity: Optional[int] = None
 
     @property
     def remaining(self) -> int:
@@ -87,6 +92,12 @@ class ServeStats:
     fuses: int = 0
     resizes: int = 0               # same part count, re-cut slot budgets
     completed: int = 0
+    # -- cross-group migration (repro.fleet.migrate) ------------------------
+    stall_ticks: int = 0           # part-ticks spent receiving migrated KV
+    steals_in: int = 0             # queued requests stolen into this group
+    steals_out: int = 0            # queued requests stolen away
+    migrations_in: int = 0         # live requests migrated into this group
+    migrations_out: int = 0        # live requests migrated away
 
     @property
     def efficiency(self) -> float:
@@ -209,18 +220,53 @@ class ReconfigurableGroup:
         else:
             self._slots = [capacity]
         self._parts: List[Optional[_Group]] = [None] * len(self._slots)
+        # per-part stall ticks: a part receiving migrated KV holds its
+        # slots busy (repro.fleet.migrate charges the transfer here)
+        self._stall: List[int] = [0] * len(self._slots)
 
     # -- admission -------------------------------------------------------------
 
-    def submit(self, requests: Sequence[Request], now: int = 0) -> None:
-        self.queue.extend(requests)
+    def submit(self, requests: Sequence[Request], now: int = 0,
+               part: Optional[int] = None) -> None:
+        """Queue requests; ``part`` records a soft part preference."""
+        for r in requests:
+            if part is not None:
+                r.part_affinity = part
+            self.queue.append(r)
         self._arrivals.record(now, len(requests))
 
-    def _prefill_wave(self, n_slots: int, now: int) -> Optional[_Group]:
-        """Admit up to n_slots queued requests: batch prefill per length."""
+    def _prefill_wave(self, n_slots: int, now: int,
+                      part_idx: Optional[int] = None) -> Optional[_Group]:
+        """Admit up to n_slots queued requests: batch prefill per length.
+
+        Part affinity is a *soft* preference: requests affine to a
+        different live part are passed over first, but an otherwise idle
+        part takes them rather than stranding its slots (work
+        conservation — affinity biases placement, never availability).
+        The scan is bounded so a deep backlog of foreign-affine
+        requests costs O(capacity) churn per part-tick, not O(queue).
+        """
         wave: List[Request] = []
-        while self.queue and len(wave) < n_slots:
-            wave.append(self.queue.popleft())
+        deferred: List[Request] = []
+        scan_budget = n_slots + 2 * self.capacity
+        while self.queue and len(wave) < n_slots \
+                and len(wave) + len(deferred) < scan_budget:
+            r = self.queue.popleft()
+            aff = r.part_affinity
+            if aff is not None and (part_idx is None
+                                    or aff >= len(self._slots)):
+                aff = r.part_affinity = None   # stale affinity: topology moved
+            if aff is not None and aff != part_idx:
+                deferred.append(r)
+                continue
+            r.part_affinity = None
+            wave.append(r)
+        while deferred and len(wave) < n_slots:
+            r = deferred.pop(0)
+            r.part_affinity = None
+            wave.append(r)
+        for r in reversed(deferred):
+            self.queue.appendleft(r)
         if not wave:
             return None
         by_len: Dict[int, List[Request]] = collections.defaultdict(list)
@@ -301,9 +347,14 @@ class ReconfigurableGroup:
             self.stats.fuses += 1
         else:
             self.stats.resizes += 1
+        # an in-flight KV transfer spans the re-laid-out state: every new
+        # part waits out the worst remaining stall (conservative, and a
+        # reconfiguration can never shed transfer cost)
+        pending_stall = max(self._stall, default=0)
         if len(target) == 1:
             self._parts = [merged]
             self._slots = [self.capacity]
+            self._stall = [pending_stall]
             return
 
         def mk(ids: List[int]) -> Optional[_Group]:
@@ -318,6 +369,7 @@ class ReconfigurableGroup:
             self.acfg.regroup_policy)
         self._parts = [mk(ids) for ids in parts_idx]
         self._slots = list(target)
+        self._stall = [pending_stall] * len(self._slots)
 
     # -- introspection (used by the fleet router and telemetry) ----------------
 
@@ -341,10 +393,85 @@ class ReconfigurableGroup:
                 out.extend(r for r in g.requests if not r.done)
         return out
 
+    def part_live(self, i: int) -> List[Request]:
+        """Live (not-done) requests currently decoding on part ``i``."""
+        g = self._parts[i]
+        if g is None:
+            return []
+        return [r for r in g.requests if not r.done]
+
     def load(self) -> float:
         """Outstanding decode work: live remaining + queued budgets."""
         return (sum(r.remaining for r in self.live_requests())
                 + sum(r.max_new_tokens for r in self.queue))
+
+    # -- cross-group migration (driven by repro.fleet.migrate) -----------------
+
+    def can_insert(self, part: int) -> bool:
+        """True when part ``part`` has a free decode slot for a live row."""
+        return (0 <= part < len(self._slots)
+                and len(self.part_live(part)) < self._slots[part])
+
+    def extract_live(self, req: Request):
+        """Remove one in-flight request and return its decode state.
+
+        Returns ``(state_row, last_row)`` — the request's KV slice and
+        next-token row, batch axis kept — or ``None`` when the request is
+        not live here (already finished or never admitted).  The source
+        part keeps its other members untouched; a part drained by the
+        extraction frees its slots immediately.
+        """
+        for i, g in enumerate(self._parts):
+            if g is None:
+                continue
+            for j, r in enumerate(g.requests):
+                if r is req and not r.done:
+                    rest = [k for k in range(len(g.requests)) if k != j]
+                    state_row, rest_state = su.split(g.state, [j], rest)
+                    last_row = g.last[j:j + 1]
+                    if rest:
+                        self._parts[i] = _Group(
+                            [g.requests[k] for k in rest], rest_state,
+                            jnp.take(g.last, jnp.asarray(rest), axis=0))
+                    else:
+                        self._parts[i] = None
+                    self.stats.migrations_out += 1
+                    return state_row, last_row
+        return None
+
+    def insert_live(self, req: Request, state, last, part: int,
+                    stall: int = 0) -> bool:
+        """Graft a migrated in-flight request onto part ``part``.
+
+        The destination part's slots stall for ``stall`` ticks — the KV
+        transfer cost — before decoding resumes.  Done-but-unretired
+        rows are compacted out first so the part's decode batch never
+        outgrows its slot budget.  Returns False (no state change) when
+        the part has no free slot.
+        """
+        if not self.can_insert(part):
+            return False
+        req.part_affinity = None
+        g = self._parts[part]
+        if g is not None:
+            live = [k for k, r in enumerate(g.requests) if not r.done]
+            if len(live) < len(g.requests):
+                for r in g.requests:
+                    if r.done:
+                        self._credit(r)
+                g = _Group([g.requests[k] for k in live],
+                           su.take(g.state, live),
+                           jnp.take(g.last, jnp.asarray(live), axis=0)) \
+                    if live else None
+        if g is None:
+            self._parts[part] = _Group([req], state, last)
+        else:
+            self._parts[part] = _Group(
+                g.requests + [req], su.concat([g.state, state]),
+                jnp.concatenate([g.last, last], axis=0))
+        self._stall[part] = max(self._stall[part], int(stall))
+        self.stats.migrations_in += 1
+        return True
 
     # -- one wall tick -----------------------------------------------------------
 
@@ -358,11 +485,15 @@ class ReconfigurableGroup:
         if self.mode == "fused":
             dynamic = False
         # each partition admits new work independently the moment it
-        # drains, up to its own slot budget
+        # drains, up to its own slot budget; a stalled part's slots are
+        # busy receiving migrated KV and admit nothing
         for i, p in enumerate(self._parts):
+            if self._stall[i] > 0:
+                continue
             if _group_done(p):
                 self._retire(p)
-                self._parts[i] = self._prefill_wave(self._slots[i], now)
+                self._parts[i] = self._prefill_wave(self._slots[i], now,
+                                                    part_idx=i)
         live = [p for p in self._parts if p is not None]
         if not live:
             return IDLE
@@ -379,6 +510,16 @@ class ReconfigurableGroup:
                 self._reconfigure(desired)
                 return RECONF
         for i, p in enumerate(self._parts):
+            if self._stall[i] > 0:
+                # the transfer occupies the part's slots for this tick:
+                # full slot-step cost, zero useful tokens.  A part left
+                # empty by a mid-transfer reconfigure stays blocked but
+                # charges nothing — it holds no work to stall
+                self._stall[i] -= 1
+                if p is not None:
+                    self.stats.slot_steps += self._slots[i]
+                    self.stats.stall_ticks += 1
+                continue
             if p is not None:
                 self._tick_group(p, self._slots[i], now)
         self.stats.ticks += 1

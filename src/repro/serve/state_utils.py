@@ -49,5 +49,15 @@ def concat(states: List[DecodeState]) -> DecodeState:
     )
 
 
+def split(state: DecodeState, take_ids: Sequence[int],
+          keep_ids: Sequence[int]):
+    """Partition the batch axis into (taken, kept) states.
+
+    The extraction primitive of live migration: the migrating rows
+    travel as ``taken`` while ``kept`` stays on the source part.
+    """
+    return take(state, take_ids), take(state, keep_ids)
+
+
 def batch_size(state: DecodeState) -> int:
     return int(state.pos.shape[0])

@@ -1,0 +1,82 @@
+"""Lightweight in-memory groups implementing the migration protocol.
+
+``repro.fleet.migrate`` plans and executes against a small group surface
+(``queue`` / ``topology`` / ``part_live`` / ``stats`` / ``can_insert`` /
+``extract_live`` / ``insert_live`` / ``submit``) so its invariants can be
+pinned without spinning up a JAX model.  :class:`FakeGroup` implements
+exactly that surface over plain lists; the real
+``repro.serve.engine.ReconfigurableGroup`` is exercised by the
+end-to-end tests in ``test_migrate.py``.
+"""
+import collections
+from typing import List, Optional
+
+from repro.serve.engine import Request, ServeStats
+
+
+class FakeGroup:
+    """Parts are lists of live Requests; KV rows are opaque tokens."""
+
+    def __init__(self, gid: int, topology, queue=(), parts=None):
+        self.gid = gid
+        self._topology = tuple(topology)
+        self.queue = collections.deque(queue)
+        self.stats = ServeStats()
+        self._parts: List[List[Request]] = \
+            [list(p) for p in parts] if parts is not None \
+            else [[] for _ in self._topology]
+        assert len(self._parts) == len(self._topology)
+        self.stall: List[int] = [0] * len(self._topology)
+
+    @property
+    def topology(self):
+        return self._topology
+
+    def part_live(self, i: int) -> List[Request]:
+        return [r for r in self._parts[i] if not r.done]
+
+    def live_requests(self) -> List[Request]:
+        return [r for p in self._parts for r in p if not r.done]
+
+    def load(self) -> float:
+        return (sum(r.remaining for r in self.live_requests())
+                + sum(r.max_new_tokens for r in self.queue))
+
+    def submit(self, requests, now: int = 0,
+               part: Optional[int] = None) -> None:
+        for r in requests:
+            if part is not None:
+                r.part_affinity = part
+            self.queue.append(r)
+
+    def can_insert(self, part: int) -> bool:
+        return (0 <= part < len(self._topology)
+                and len(self.part_live(part)) < self._topology[part])
+
+    def extract_live(self, req: Request):
+        for p in self._parts:
+            for j, r in enumerate(p):
+                if r is req and not r.done:
+                    del p[j]
+                    self.stats.migrations_out += 1
+                    return ("kv", req.rid), ("last", req.rid)
+        return None
+
+    def insert_live(self, req: Request, state, last, part: int,
+                    stall: int = 0) -> bool:
+        if not self.can_insert(part):
+            return False
+        self._parts[part].append(req)
+        self.stall[part] = max(self.stall[part], int(stall))
+        self.stats.migrations_in += 1
+        return True
+
+
+def all_requests(groups) -> List[Request]:
+    """Every request anywhere in the fake fleet (queues + parts)."""
+    out: List[Request] = []
+    for g in groups:
+        out.extend(g.queue)
+        for p in g._parts:
+            out.extend(p)
+    return out

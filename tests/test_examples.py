@@ -39,3 +39,8 @@ def test_serve_fleet_example_runs():
 def test_hetero_topology_example_runs():
     _run("hetero_topology.py", ["--groups", "2", "--capacity", "4",
                                 "--horizon", "20"])
+
+
+def test_work_stealing_example_runs():
+    _run("work_stealing.py", ["--groups", "2", "--capacity", "4",
+                              "--horizon", "20"])

@@ -1,0 +1,352 @@
+"""Cross-group work stealing and KV-costed migration (repro.fleet.migrate).
+
+Planner- and executor-level invariants run against the lightweight
+protocol fakes in ``fake_fleet.py`` (no model); the end-to-end section
+drives real ``ReconfigurableGroup``s and the full ``FleetEngine`` to pin
+the books-balance and token-identity contracts under migration.  The
+same conservation invariants are fuzzed under hypothesis in
+``test_migrate_properties.py``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from fake_fleet import FakeGroup, all_requests
+from repro.configs import get_config
+from repro.configs.base import AmoebaConfig, FleetConfig, MigrationConfig
+from repro.control import (ConfigSpace, FeatureVector, FleetController,
+                           GroupController, ThresholdPolicy)
+from repro.fleet import FleetEngine, imbalanced_trace
+from repro.fleet.migrate import (KVTransferCost, LIVE, STEAL,
+                                 MigrationPlanner)
+from repro.models import transformer as T
+from repro.serve import ReconfigurableGroup, Request
+
+AMOEBA = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                      min_phase_steps=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-14b", reduced=True)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def model_cfg():
+    return get_config("qwen3-14b", reduced=True)
+
+
+def planner(mcfg=None, **kw):
+    kw.setdefault("enabled", True)
+    return MigrationPlanner(MigrationConfig(**kw), mcfg or model_cfg(),
+                            long_threshold=24, window=256)
+
+
+def req(rid, tokens, generated=0, plen=4):
+    r = Request(rid, [1] * plen, tokens)
+    r.generated = [0] * generated
+    return r
+
+
+# -- KVTransferCost ------------------------------------------------------------
+
+def test_kv_bytes_grow_with_seq_len_and_window_caps():
+    cfg = model_cfg()
+    c = KVTransferCost(link_bandwidth=1e6)
+    assert c.kv_bytes(64, cfg) > c.kv_bytes(8, cfg) > 0
+    assert c.kv_bytes(512, cfg, window=64) == c.kv_bytes(64, cfg, window=64)
+
+
+def test_zero_bandwidth_prices_transfer_at_infinity():
+    cfg = model_cfg()
+    assert np.isinf(KVTransferCost(link_bandwidth=0.0)
+                    .stall_ticks(16, cfg))
+    assert KVTransferCost(link_bandwidth=1e12).stall_ticks(16, cfg) >= 1
+
+
+# -- planning against protocol fakes -------------------------------------------
+
+def test_planner_steals_overflow_to_starving_parts():
+    donor = FakeGroup(0, (4,), queue=[req(i, 40 if i % 2 else 3)
+                                      for i in range(6)])
+    recip = FakeGroup(1, (5, 3))
+    p = planner(steal_threshold=1, max_steals=4)
+    plans = p.plan(0, [donor, recip])
+    steals = [m for m in plans if m.kind == STEAL]
+    assert steals and all(m.dst[0] == 1 for m in steals)
+    # long victims target the narrowest part, short the widest
+    for m in steals:
+        want = 1 if m.request.max_new_tokens >= 24 else 0
+        assert m.dst[1] == want, m.as_dict()
+    executed = p.execute(plans, [donor, recip], now=0)
+    assert executed == len(steals)
+    assert p.steals == len(steals)
+    assert donor.stats.steals_out == len(steals)
+    assert recip.stats.steals_in == len(steals)
+    # donor keeps its oldest requests: steals come from the queue tail
+    assert [r.rid for r in donor.queue] == \
+        list(range(6 - len(steals)))
+
+
+def test_planner_respects_steal_budget_and_threshold():
+    donor = FakeGroup(0, (8,), queue=[req(i, 4) for i in range(20)])
+    recip = FakeGroup(1, (8,))
+    plans = planner(steal_threshold=2, max_steals=3).plan(0, [donor, recip])
+    assert len(plans) == 3
+    # a donor at/below the threshold is left alone
+    calm = FakeGroup(0, (8,), queue=[req(0, 4), req(1, 4)])
+    assert planner(steal_threshold=2).plan(0, [calm, FakeGroup(1, (8,))]) \
+        == []
+
+
+def test_no_circular_steals_between_mutually_loaded_groups():
+    """Two groups both over the steal threshold must not swap requests:
+    a group with a steal-worthy backlog is never a recipient."""
+    a = FakeGroup(0, (4,), queue=[req(i, 8) for i in range(3)])
+    b = FakeGroup(1, (4,), queue=[req(i + 10, 8) for i in range(3)])
+    assert planner(steal_threshold=2).plan(0, [a, b]) == []
+
+
+def test_reserved_parts_are_steal_ineligible():
+    donor = FakeGroup(0, (4,), queue=[req(i, 40) for i in range(5)])
+    recip = FakeGroup(1, (3, 1))
+    # the only free narrow part is reserved: long steals fall to part 0;
+    # reserving everything blocks stealing entirely
+    plans = planner(steal_threshold=1).plan(0, [donor, recip],
+                                            reserved={(1, 1)})
+    assert plans and all(m.dst == (1, 0) for m in plans)
+    plans = planner(steal_threshold=1).plan(
+        0, [donor, recip], reserved={(1, 0), (1, 1)})
+    assert plans == []
+
+
+def test_live_migration_plans_and_amortization():
+    lives = [req(0, 60, generated=1), req(1, 3, generated=1),
+             req(2, 3, generated=1), req(3, 3, generated=1)]
+    donor = FakeGroup(0, (4,), parts=[lives])
+    recip = FakeGroup(1, (2, 2))
+    p = planner(live=True, min_gain=0.02, link_bandwidth=1e12)
+    plans = p.plan(0, [donor, recip])
+    live = [m for m in plans if m.kind == LIVE]
+    assert len(live) == 1
+    m = live[0]
+    assert m.request.rid == 0 and m.src == (0, 0) and m.dst[0] == 1
+    assert m.gain > 0.02 and m.stall >= 1
+    assert p.execute(plans, [donor, recip], now=0) == 1
+    assert recip.part_live(m.dst[1]) == [m.request]
+    assert recip.stall[m.dst[1]] == m.stall
+    assert donor.part_live(0) == lives[1:]
+
+
+def test_zero_bandwidth_fails_every_live_amortization_but_steals_flow():
+    lives = [req(0, 60, generated=1), req(1, 3, generated=1)]
+    donor = FakeGroup(0, (4,), parts=[lives],
+                      queue=[req(10, 4), req(11, 4)])
+    recip = FakeGroup(1, (2, 2))
+    p = planner(live=True, link_bandwidth=0.0, steal_threshold=1)
+    plans = p.plan(0, [donor, recip])
+    assert all(m.kind == STEAL for m in plans) and plans
+    assert p.rejected_amortization > 0
+
+
+def test_execute_conserves_requests_and_budgets():
+    donor = FakeGroup(0, (4,), parts=[[req(0, 50, generated=1),
+                                       req(1, 2, generated=1)]],
+                      queue=[req(i + 2, 8) for i in range(6)])
+    recip = FakeGroup(1, (2, 2), parts=[[req(20, 5, generated=1)], []])
+    groups = [donor, recip]
+    before = sorted(r.rid for r in all_requests(groups))
+    p = planner(steal_threshold=1, live=True, link_bandwidth=1e12,
+                min_gain=0.0)
+    for tick in range(4):
+        p.execute(p.plan(tick, groups), groups, now=tick)
+        after = sorted(r.rid for r in all_requests(groups))
+        assert after == before                      # no loss, no duplication
+        for g in groups:
+            for i, slots in enumerate(g.topology):
+                assert len(g.part_live(i)) <= slots
+
+
+def test_stale_plan_is_dropped_not_applied():
+    donor = FakeGroup(0, (4,), queue=[req(0, 8), req(1, 8), req(2, 8)])
+    recip = FakeGroup(1, (4,))
+    p = planner(steal_threshold=1)
+    plans = p.plan(0, [donor, recip])
+    assert plans
+    victim = plans[0].request
+    donor.queue.remove(victim)                      # raced away
+    executed = p.execute(plans, [donor, recip], now=0)
+    assert executed == len(plans) - 1
+    assert victim not in recip.queue
+
+
+# -- quarantine reservation (exact-composition fleet hints) --------------------
+
+class _CtlGroup:
+    """test_control-style fake exposing the FleetController surface."""
+
+    def __init__(self, remaining, capacity=8, max_ways=4):
+        self.controller = GroupController(
+            ThresholdPolicy(0.95, 0.0),
+            ConfigSpace(capacity, max_ways=max_ways), dwell=1)
+        self._remaining = list(remaining)
+        self.queue = []
+
+    def live_requests(self):
+        class R:
+            def __init__(self, n):
+                self.remaining = n
+                self.max_new_tokens = n
+        return [R(n) for n in self._remaining]
+
+    def load(self):
+        return sum(self._remaining)
+
+    def observe(self):
+        rem = np.asarray(self._remaining, np.float64)
+        self.controller.observe(FeatureVector.from_group(
+            rem, 0, 0.0, self.controller.space.capacity))
+
+
+def test_quarantine_reservation_survives_rebalance():
+    groups = [_CtlGroup([10.0, 12.0, 11.0, 10.0]),
+              _CtlGroup([10.0, 12.0, 11.0, 10.0])]
+    fc = FleetController(long_threshold=24, every=1, quarantine=0)
+    for t in range(8):
+        fc.rebalance(t, groups)
+        for g in groups:
+            g.observe()
+    assert groups[0].controller.state.topology == (7, 1)
+    assert fc.reserved_parts(groups) == {(0, 1)}
+    # the reservation holds across further rebalances (and would be
+    # re-asserted if the group's own policy drifted it away)
+    for t in range(8, 16):
+        fc.rebalance(t, groups)
+        for g in groups:
+            g.observe()
+    assert groups[0].controller.state.topology == (7, 1)
+    assert fc.reserved_parts(groups) == {(0, 1)}
+
+
+def test_mix_nudges_skip_the_quarantine_group():
+    """Long-tail pressure must nudge the other groups, never fight the
+    quarantine group's standing exact-composition hint."""
+    groups = [_CtlGroup([100.0, 90.0, 95.0, 100.0]),
+              _CtlGroup([100.0, 90.0, 95.0, 100.0])]
+    fc = FleetController(long_threshold=24, every=1, quarantine=0)
+    fc.rebalance(0, groups)
+    assert groups[0].controller._hint == (7, 1)      # reservation, not a 2
+    assert groups[1].controller._hint == 2           # mix nudge went here
+
+
+def test_exact_composition_hint_applies_and_retires():
+    gc = GroupController(ThresholdPolicy(0.95, 0.0),
+                         ConfigSpace(8, max_ways=4), dwell=1)
+    fv = FeatureVector.from_group(
+        np.array([10.0, 12.0, 11.0, 10.0]), 0, 0.0, 8)
+    gc.request_topology((7, 1))
+    for _ in range(4):
+        gc.observe(fv)
+    assert gc.state.topology == (7, 1)
+    assert gc._hint is None                          # retired exactly
+
+
+# -- end to end on the real engine ---------------------------------------------
+
+def _check_books(requests, eng):
+    assert eng.completed == len(requests)
+    assert all(r.done for r in requests)
+    assert eng.useful_tokens == sum(len(r.generated) for r in requests)
+    assert all(len(r.generated) == r.max_new_tokens for r in requests)
+
+
+def test_fleet_stealing_balances_books_and_tokens(setup):
+    """Stealing must change only placement: every request completes
+    exactly once and generates exactly the tokens it would have
+    generated without migration."""
+    cfg, params = setup
+    texts = {}
+    for label, mig in (("off", MigrationConfig(enabled=False)),
+                       ("on", MigrationConfig(enabled=True))):
+        trace = imbalanced_trace(horizon=25, vocab_size=cfg.vocab_size,
+                                 seed=6, shards=2)
+        eng = FleetEngine(cfg, params, fleet=FleetConfig(
+            num_groups=2, capacity=4, router="sticky", mode="dynamic",
+            rebalance_every=4, migrate=mig, amoeba=AMOEBA))
+        eng.submit(trace)
+        s = eng.run()
+        _check_books(trace, eng)
+        texts[label] = {r.rid: tuple(r.generated) for r in trace}
+        if label == "on":
+            assert s["migration"]["steals"] > 0
+            assert s["migration"]["plan_ticks"] > 0
+            for g in s["groups"]:
+                assert "steals_in" in g and "stall_ticks" in g
+    assert texts["off"] == texts["on"]
+
+
+def test_live_migration_end_to_end(setup):
+    """A real KV row moves between groups: books balance, the stall is
+    charged to the destination part, and the migrated request's tokens
+    are unchanged."""
+    cfg, params = setup
+    reqs = [Request(i, [1, 2, 3, 4], n)
+            for i, n in enumerate([60, 3, 3, 3])]
+    baseline = [Request(i, [1, 2, 3, 4], n)
+                for i, n in enumerate([60, 3, 3, 3])]
+    g0 = ReconfigurableGroup(cfg, params, capacity=4, mode="fused",
+                             amoeba=AMOEBA)
+    g1 = ReconfigurableGroup(cfg, params, capacity=4, mode="split",
+                             amoeba=AMOEBA)
+    g0.submit(reqs)
+    g0.step(now=0)                       # admit + first decode tick
+    p = planner(live=True, min_gain=0.0, link_bandwidth=1e12)
+    plans = p.plan(0, [g0, g1])
+    live = [m for m in plans if m.kind == LIVE]
+    assert len(live) == 1 and live[0].request is reqs[0]
+    assert p.execute(plans, [g0, g1], now=0) == 1
+    assert g1.stats.migrations_in == 1 and g0.stats.migrations_out == 1
+    tick = 1
+    while tick < 500:
+        s0 = g0.step(now=tick)
+        s1 = g1.step(now=tick)
+        if s0 == "idle" and s1 == "idle":
+            break
+        tick += 1
+    g0.finalize()
+    g1.finalize()
+    assert g0.stats.completed + g1.stats.completed == len(reqs)
+    assert all(r.done for r in reqs)
+    assert g1.stats.stall_ticks >= live[0].stall
+    # token identity vs an undisturbed fused run
+    ref = ReconfigurableGroup(cfg, params, capacity=4, mode="fused",
+                              amoeba=AMOEBA)
+    ref.submit(baseline)
+    t = 0
+    while ref.step(now=t) != "idle" and t < 500:
+        t += 1
+    ref.finalize()
+    assert [tuple(r.generated) for r in reqs] \
+        == [tuple(r.generated) for r in baseline]
+
+
+def test_quarantine_fleet_runs_and_reports(setup):
+    cfg, params = setup
+    trace = imbalanced_trace(horizon=20, vocab_size=cfg.vocab_size,
+                             seed=7, shards=2)
+    eng = FleetEngine(cfg, params, fleet=FleetConfig(
+        num_groups=2, capacity=4, router="sticky", mode="dynamic",
+        rebalance_every=2, quarantine_group=1,
+        migrate=MigrationConfig(enabled=True), amoeba=AMOEBA))
+    eng.submit(trace)
+    s = eng.run()
+    _check_books(trace, eng)
+    assert "reserved_parts" in s["control"]
+
+
+def test_quarantine_group_out_of_range_rejected(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="quarantine_group"):
+        FleetEngine(cfg, params, fleet=FleetConfig(
+            num_groups=2, capacity=4, quarantine_group=5, amoeba=AMOEBA))

@@ -1,0 +1,99 @@
+"""Hypothesis properties for the migration planner/executor.
+
+Follows the repo's importorskip pattern (cf. test_control_properties.py):
+this module skips where hypothesis is unavailable, and the same
+contracts are pinned with concrete cases in test_migrate.py, which
+always runs.  The invariants fuzzed here are the ISSUE's conservation
+contract: across any plan execution no request is lost or duplicated,
+per-part slot budgets are never exceeded, and a zero-bandwidth
+KVTransferCost makes every live-migration plan amortization-fail while
+queue steals keep flowing.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from fake_fleet import FakeGroup, all_requests
+from repro.configs import get_config
+from repro.configs.base import MigrationConfig
+from repro.fleet.migrate import STEAL, MigrationPlanner
+from repro.serve.engine import Request
+
+MODEL_CFG = get_config("qwen3-14b", reduced=True)
+
+
+def _planner(**kw):
+    kw.setdefault("enabled", True)
+    kw.setdefault("steal_threshold", 1)
+    kw.setdefault("min_gain", 0.0)
+    return MigrationPlanner(MigrationConfig(**kw), MODEL_CFG,
+                            long_threshold=24, window=64)
+
+
+def _req(rid: int, tokens: int, started: bool) -> Request:
+    r = Request(rid, [1, 2, 3, 4], tokens)
+    if started:
+        r.generated = [0]          # live: one token in, remaining > 0
+    return r
+
+
+@st.composite
+def fleets(draw):
+    n_groups = draw(st.integers(2, 4))
+    rid = iter(range(100_000))
+    groups = []
+    for gi in range(n_groups):
+        topo = tuple(draw(st.lists(st.integers(1, 4),
+                                   min_size=1, max_size=3)))
+        parts = []
+        for slots in topo:
+            k = draw(st.integers(0, slots))
+            parts.append([_req(next(rid), draw(st.integers(2, 80)), True)
+                          for _ in range(k)])
+        queue = [_req(next(rid), draw(st.integers(1, 80)), False)
+                 for _ in range(draw(st.integers(0, 6)))]
+        groups.append(FakeGroup(gi, topo, queue=queue, parts=parts))
+    return groups
+
+
+@given(fleets(), st.floats(1e3, 1e12), st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_no_request_lost_or_duplicated_and_budgets_hold(groups, bw, rounds):
+    p = _planner(live=True, link_bandwidth=bw)
+    before = sorted(r.rid for r in all_requests(groups))
+    assert len(set(before)) == len(before)
+    for tick in range(rounds):
+        plans = p.plan(tick, groups)
+        p.execute(plans, groups, now=tick)
+        after = sorted(r.rid for r in all_requests(groups))
+        assert after == before, "request lost or duplicated"
+        for g in groups:
+            for i, slots in enumerate(g.topology):
+                assert len(g.part_live(i)) <= slots, \
+                    "part slot budget exceeded"
+
+
+@given(fleets(), st.integers(1, 3))
+@settings(max_examples=40, deadline=None)
+def test_zero_bandwidth_never_plans_live_migrations(groups, rounds):
+    p = _planner(live=True, link_bandwidth=0.0)
+    for tick in range(rounds):
+        plans = p.plan(tick, groups)
+        assert all(m.kind == STEAL for m in plans)
+        p.execute(plans, groups, now=tick)
+    assert p.live_migrations == 0
+
+
+@given(fleets())
+@settings(max_examples=40, deadline=None)
+def test_reserved_parts_never_receive_work(groups):
+    # reserve every part of group 0: nothing may land there
+    reserved = {(0, i) for i in range(len(groups[0].topology))}
+    p = _planner(live=True, link_bandwidth=1e12)
+    plans = p.plan(0, groups, reserved=reserved)
+    assert all(m.dst[0] != 0 for m in plans)
+    p.execute(plans, groups, now=0)
+    for i, slots in enumerate(groups[0].topology):
+        assert len(groups[0].part_live(i)) <= slots

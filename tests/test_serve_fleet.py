@@ -277,17 +277,51 @@ def test_rolling_window_rate():
     assert abs(w.rate() - 3.0) < 1e-9
 
 
+class _FakeRoutee:
+    def __init__(self, split, load, topology=None):
+        self.is_split, self._load = split, load
+        if topology is not None:
+            self.topology = topology
+
+    def load(self):
+        return self._load
+
+
 def test_length_aware_router_prefers_split_groups():
-    class Fake:
-        def __init__(self, split, load):
-            self.is_split, self._load = split, load
-
-        def load(self):
-            return self._load
-
-    groups = [Fake(False, 0), Fake(True, 100), Fake(True, 50)]
+    groups = [_FakeRoutee(False, 0), _FakeRoutee(True, 100),
+              _FakeRoutee(True, 50)]
     state = {"long_threshold": 24}
     long_req = Request(0, [1], 48)
     short_req = Request(1, [1], 3)
-    assert route_length_aware(long_req, groups, state) == 2   # least-loaded split
-    assert route_length_aware(short_req, groups, state) == 0  # fused group
+    # routers address (group, part); no topology attr -> no part choice
+    assert route_length_aware(long_req, groups, state) == (2, None)
+    assert route_length_aware(short_req, groups, state) == (0, None)
+
+
+def test_length_aware_router_addresses_parts():
+    """Long requests target the narrowest part (the quarantine slice),
+    short requests the widest — the same addressing migration steals use."""
+    groups = [_FakeRoutee(False, 0, topology=(8,)),
+              _FakeRoutee(True, 50, topology=(5, 3))]
+    state = {"long_threshold": 24}
+    assert route_length_aware(Request(0, [1], 48), groups, state) == (1, 1)
+    assert route_length_aware(Request(1, [1], 3), groups, state) == (0, None)
+
+
+def test_router_tie_break_is_least_recently_assigned():
+    """Equal-load ties must rotate across groups, not pile onto group 0."""
+    from repro.fleet.scheduler import route_least_loaded
+
+    groups = [_FakeRoutee(False, 7) for _ in range(4)]
+    state = {}
+    picks = [route_least_loaded(Request(i, [1], 4), groups, state)[0]
+             for i in range(100)]
+    counts = [picks.count(g) for g in range(len(groups))]
+    assert min(counts) >= 20, counts       # near-uniform, not index-biased
+    # and the length-aware router inherits the same rotation on ties
+    groups = [_FakeRoutee(True, 7, topology=(2, 2)) for _ in range(4)]
+    state = {"long_threshold": 24}
+    picks = [route_length_aware(Request(i, [1], 48), groups, state)[0]
+             for i in range(100)]
+    counts = [picks.count(g) for g in range(len(groups))]
+    assert min(counts) >= 20, counts
