@@ -164,6 +164,104 @@ def work_stealing_sweep(cfg, params, rt, decode, *, groups: int,
     return out
 
 
+def cluster_hierarchy_sweep(cfg, params, rt, decode, *, capacity: int,
+                            horizon: int, seed: int, chips: int = 2,
+                            groups_per_chip: int = 2) -> Dict:
+    """Hierarchical vs distance-blind control on a 2D chip mesh.
+
+    Both runs drive the same multi-chip imbalanced trace (one hot chip
+    bursts fat-tailed work while the others trickle) through identical
+    capacity on the same tiered physics — slow, high-latency inter-chip
+    links under a near-free NoC.  The only difference is the planner's
+    *cost model*: ``hierarchical`` plans chip-first and authorizes
+    crossings only when the tiered cost amortizes, while ``flat_blind``
+    (``ClusterConfig.distance_blind``) plans over one flat pool as if
+    every pair were NoC-close — and execution charges it the physical
+    prices anyway, which is how blind stealing thrashes slow links.  A
+    third run re-prices the inter-chip tiers at zero bandwidth to pin
+    the veto contract: every cross-chip move is refused while intra-chip
+    migration keeps flowing.
+    """
+    from repro.configs.base import (AmoebaConfig, ClusterConfig, FleetConfig,
+                                    MigrationConfig)
+    from repro.cluster import ClusterEngine
+    from repro.fleet import multichip_imbalanced_trace
+
+    groups = chips * groups_per_chip
+    amoeba = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                          min_phase_steps=2)
+    mig = MigrationConfig(enabled=True, live=True)
+    # slow high-latency links under a near-free NoC — the regime where
+    # ignoring geometry costs the most — with enough cross-steal budget
+    # that the amortization bar, not the cap, separates the two planners
+    tiers = ClusterConfig(groups_per_chip=groups_per_chip,
+                          noc_bandwidth=4e9, noc_latency=0.0,
+                          link_bandwidth=256.0, link_latency=12.0,
+                          net_bandwidth=64.0, net_latency=24.0,
+                          max_cross_steals=4)
+    variants = {"flat_blind": tiers.replace(distance_blind=True),
+                "hierarchical": tiers,
+                "zero_interchip": tiers.replace(link_bandwidth=0.0,
+                                                net_bandwidth=0.0)}
+    out: Dict = {"config": {"chips": chips,
+                            "groups_per_chip": groups_per_chip,
+                            "capacity": capacity,
+                            "link_bandwidth": tiers.link_bandwidth,
+                            "link_latency": tiers.link_latency}}
+    for label, ccfg in variants.items():
+        trace = multichip_imbalanced_trace(
+            horizon=horizon, vocab_size=cfg.vocab_size, seed=seed,
+            chips=chips, groups_per_chip=groups_per_chip)
+        eng = ClusterEngine(cfg, params, rt=rt, decode_fn=decode,
+                            fleet=FleetConfig(
+                                num_groups=groups, capacity=capacity,
+                                router="sticky", mode="dynamic",
+                                rebalance_every=4, migrate=mig,
+                                amoeba=amoeba, cluster=ccfg))
+        eng.submit(trace)
+        s = eng.run()
+        if s["completed"] != len(trace):
+            raise RuntimeError(f"{label}: completed {s['completed']} of "
+                               f"{len(trace)} requests")
+        out[label] = s
+        lat, m = s["latency"], s["migration"]
+        print(f"{label:14s} ticks={s['wall_ticks']:4d} "
+              f"p50={lat['p50']:5.1f} p99={lat['p99']:5.1f} "
+              f"steals={m['steals']} (noc={m['intra_chip_steals']} "
+              f"x={m['cross_chip_steals']}) "
+              f"live={m['live_migrations']} (noc={m['intra_chip_live']} "
+              f"x={m['cross_chip_live']}) "
+              f"vetoed={m['vetoed_cross_chip']} "
+              f"link_stall={s['cluster']['tier_stall_ticks']['link']}")
+    flat, hier = out["flat_blind"], out["hierarchical"]
+    zero = out["zero_interchip"]
+    zm = zero["migration"]
+    out["validation"] = {
+        "hierarchical_p99_speedup_vs_flat": round(
+            flat["latency"]["p99"] / max(hier["latency"]["p99"], 1e-9), 3),
+        "hierarchical_beats_flat": bool(
+            hier["latency"]["p99"] <= flat["latency"]["p99"]),
+        "flat_interchip_stall_ticks":
+            flat["cluster"]["tier_stall_ticks"]["link"]
+            + flat["cluster"]["tier_stall_ticks"]["net"],
+        "hier_interchip_stall_ticks":
+            hier["cluster"]["tier_stall_ticks"]["link"]
+            + hier["cluster"]["tier_stall_ticks"]["net"],
+        "hier_cross_chip_steals": hier["migration"]["cross_chip_steals"],
+        "hier_vetoed_cross_chip": hier["migration"]["vetoed_cross_chip"],
+        # the veto contract: dead inter-chip tiers stop every crossing
+        # while the NoC keeps migrating
+        "zero_bw_cross_moves": zm["cross_chip_steals"]
+            + zm["cross_chip_live"],
+        "zero_bw_intra_moves": zm["intra_chip_steals"]
+            + zm["intra_chip_live"],
+        "zero_bw_vetoes_crossings_intra_flows": bool(
+            zm["cross_chip_steals"] + zm["cross_chip_live"] == 0
+            and zm["intra_chip_steals"] + zm["intra_chip_live"] > 0),
+    }
+    return out
+
+
 def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
                 seed: int = 0, out_path: str = OUT) -> Dict:
     import jax
@@ -224,16 +322,28 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
         f"{k}={v['mean_abs_impact']:.2f}" for k, v in ablation.items())
         + f"  (dominant: {top_feat})")
 
+    # drop compiled executables between sweeps: the accumulated jitted
+    # shapes from dozens of engine replays can exhaust the CPU JIT's
+    # mmap budget in one long-lived process (LLVM "Cannot allocate
+    # memory"); each sweep recompiles what it needs
+    jax.clear_caches()
     print("\n== composition sweep (heterogeneous vs equal ladders) ==")
     decode = make_decode_fn(cfg, rt)
     out["composition_sweep"] = composition_sweep(
         cfg, params, rt, decode, groups=groups,
         capacity=capacity, horizon=horizon, seed=seed)
 
+    jax.clear_caches()
     print("\n== work-stealing sweep (imbalanced trace, sticky routing) ==")
     out["work_stealing"] = work_stealing_sweep(
         cfg, params, rt, decode, groups=groups,
         capacity=capacity, horizon=horizon, seed=seed)
+
+    jax.clear_caches()
+    print("\n== cluster hierarchy sweep (2D mesh, tiered links) ==")
+    out["cluster_hierarchy"] = cluster_hierarchy_sweep(
+        cfg, params, rt, decode, capacity=capacity,
+        horizon=horizon, seed=seed)
 
     dyn, fus = out["amoeba_dynamic"], out["static_fused"]
     thr = pol["threshold"]
@@ -283,6 +393,13 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
     print(f"stealing vs no-stealing: p99 {wv['steal_p99_speedup']:.2f}x, "
           f"steals={wv['steals']} live={wv['live_migrations']}, "
           f"wins: {wv['stealing_beats_no_stealing']}")
+    hv = out["cluster_hierarchy"]["validation"]
+    print(f"hierarchical vs flat-blind: "
+          f"p99 {hv['hierarchical_p99_speedup_vs_flat']:.2f}x, "
+          f"interchip stall {hv['flat_interchip_stall_ticks']} -> "
+          f"{hv['hier_interchip_stall_ticks']} ticks, "
+          f"wins: {hv['hierarchical_beats_flat']}; zero-bw veto holds: "
+          f"{hv['zero_bw_vetoes_crossings_intra_flows']}")
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {os.path.abspath(out_path)}")

@@ -1,0 +1,23 @@
+"""Hierarchical fleet-of-fleets on a 2D chip mesh with tiered costs.
+
+The layer above ``repro.fleet``: groups sit at 2D coordinates,
+partitioned into chips (and chips into nodes), and moving state between
+two groups is priced by the *tier* of the pair — intra-chip NoC,
+inter-chip link, inter-node network — with per-hop latency.  A
+:class:`ClusterController` steers each chip's split-mix against its own
+pressure, gathers regions of adjacent groups for long-context tail
+mass, and authorizes cross-chip steals and live migrations only when
+the tiered cost amortizes; a :class:`ClusterEngine` drives it all with
+the unchanged ``FleetEngine`` loop.
+"""
+from repro.cluster.controller import (ChipPressure, ClusterController,
+                                      ClusterPlanner)
+from repro.cluster.engine import ClusterEngine
+from repro.cluster.mesh import TIERS, ClusterMesh, TieredTransferCost
+from repro.cluster.regions import Region, RegionManager
+
+__all__ = [
+    "TIERS", "ClusterMesh", "TieredTransferCost",
+    "ClusterPlanner", "ClusterController", "ChipPressure",
+    "ClusterEngine", "Region", "RegionManager",
+]

@@ -1,0 +1,68 @@
+"""ClusterEngine: a FleetEngine whose control plane is the cluster stack.
+
+The wiring is deliberately thin: ``FleetEngine.run`` already drives a
+controller (``rebalance`` / ``take_plans``) and a planner (``execute``)
+between decode ticks, so swapping the flat
+:class:`~repro.control.FleetController` for a
+:class:`~repro.cluster.ClusterController` — which presents the same
+surface — re-uses the whole loop.  Only two hooks differ:
+
+* ``_deliver`` also lands in-flight cross-chip steals whose transfer
+  time has elapsed (the slow-link ticks a stolen request spends in the
+  air before it can even queue at its recipient);
+* ``_next_event`` folds the earliest in-flight landing into the idle
+  fast-forward horizon, so an otherwise-idle fleet never terminates
+  with requests still on the wire.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ClusterConfig, FleetConfig, ModelConfig
+from repro.cluster.controller import ClusterController
+from repro.cluster.mesh import ClusterMesh
+from repro.fleet.scheduler import FleetEngine
+
+
+class ClusterEngine(FleetEngine):
+    """N groups on a 2D chip mesh under hierarchical, tiered control.
+
+    ``cluster`` may come as an argument or as ``fleet.cluster``; the
+    cluster layer needs a dynamic fleet with migration enabled (its
+    planner *is* the migration planner, tiered).
+    """
+
+    def __init__(self, model_cfg: ModelConfig, params, *,
+                 fleet: FleetConfig = FleetConfig(),
+                 cluster: Optional[ClusterConfig] = None, **kw):
+        cluster = cluster or fleet.cluster or ClusterConfig()
+        fleet = fleet.replace(cluster=cluster)
+        if fleet.mode != "dynamic" or not fleet.migrate.enabled:
+            raise ValueError(
+                "ClusterEngine needs mode='dynamic' and "
+                "fleet.migrate.enabled (the cluster planner is the "
+                "tiered migration planner)")
+        super().__init__(model_cfg, params, fleet=fleet, **kw)
+        self.mesh = ClusterMesh(
+            num_groups=fleet.num_groups,
+            groups_per_chip=cluster.groups_per_chip,
+            chips_per_node=cluster.chips_per_node)
+        self.cluster = ClusterController(self.mesh, cluster, fleet,
+                                         model_cfg)
+        # swap the flat chip-level control plane for the cluster stack;
+        # run()/telemetry drive .controller/.planner exactly as before
+        self.controller = self.cluster
+        self.planner = self.cluster.planner
+        # the router's admission-spill pressure view rides the tiered
+        # planner now
+        self._router_state["planner"] = self.planner
+
+    def _deliver(self) -> None:
+        self.planner.deliver_in_flight(self.wall, self.groups)
+        super()._deliver()
+
+    def _next_event(self) -> Optional[int]:
+        events = [t for t in (super()._next_event(),
+                              self.planner.next_arrival())
+                  if t is not None]
+        return min(events) if events else None

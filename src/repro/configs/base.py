@@ -297,9 +297,57 @@ class MigrationConfig:
     max_live: int = 1               # live migrations per plan tick
     link_bandwidth: float = 4e9     # KV bytes per wall tick over the link
     kv_dtype_bytes: int = 2         # bf16 KV cache entries
+    # ship the KV cache int8-quantized (kernels/quantize.py row layout:
+    # one int8 code per entry + one fp32 scale per row) — ~4x fewer
+    # migration bytes, so live moves amortize at lower bandwidths
+    quantized_kv: bool = False
     min_gain: float = 0.02          # amortization floor (move_gain scale)
+    # admission spill: when a router-pinned group's expected ticks-to-
+    # drain (the planner's pressure view) exceeds this, sticky admissions
+    # spill to the least-pressured group instead; 0 disables
+    spill_threshold: float = 0.0
 
     def replace(self, **kw) -> "MigrationConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    """Hierarchical fleet-of-fleets on a 2D chip mesh with tiered links.
+
+    Knobs for ``repro.cluster``: groups sit at 2D coordinates and are
+    partitioned into chips (optionally grouped further into nodes);
+    moving state between two groups is priced by the *tier* of the pair
+    — intra-chip NoC, inter-chip link, or inter-node network — with a
+    per-hop latency on top of the bandwidth term (see
+    :class:`repro.cluster.TieredTransferCost`).  The
+    :class:`repro.cluster.ClusterController` steers each chip's
+    split-mix, authorizes cross-chip steals/live-migrations only when
+    the tiered cost amortizes, and gathers regions of adjacent groups
+    for long-context tail mass (``region_*``).
+    """
+    groups_per_chip: int = 4
+    chips_per_node: Optional[int] = None   # None = every chip on one node
+    # per-tier transfer: bytes per wall tick + per-hop latency ticks
+    noc_bandwidth: float = 4e9      # intra-chip network-on-chip
+    noc_latency: float = 0.0
+    link_bandwidth: float = 2e8     # inter-chip link (same node)
+    link_latency: float = 1.0
+    net_bandwidth: float = 5e7      # inter-node network
+    net_latency: float = 4.0
+    # A/B baseline: plan with the flat (distance-blind) cost model over
+    # one global pool; execution still pays the true tiered costs
+    distance_blind: bool = False
+    max_cross_steals: int = 2       # cross-chip steals per plan tick
+    # region gather: fuse adjacent same-chip groups into one deep
+    # logical group while the chip's long-tail mass persists
+    region_gather: bool = True
+    region_long_frac: float = 0.5   # chip long fraction that opens a region
+    region_release_frac: float = 0.2
+    region_max_groups: int = 2
+    region_dwell: int = 24          # min ticks a region stays gathered
+
+    def replace(self, **kw) -> "ClusterConfig":
         return dataclasses.replace(self, **kw)
 
 
@@ -329,6 +377,9 @@ class FleetConfig:
     # fleet hint); reserved parts are steal-ineligible for the planner
     quarantine_group: Optional[int] = None
     amoeba: AmoebaConfig = AmoebaConfig()
+    # the hierarchical layer above the fleet (repro.cluster): groups on
+    # a 2D chip mesh with tiered transfer costs; None = flat fleet
+    cluster: Optional[ClusterConfig] = None
 
     def replace(self, **kw) -> "FleetConfig":
         return dataclasses.replace(self, **kw)

@@ -13,6 +13,7 @@ from repro.fleet.scheduler import (DEFAULT_MODES, ROUTERS, FleetEngine,
 from repro.fleet.telemetry import FleetTelemetry, RollingWindow
 from repro.fleet.traffic import (TenantProfile, bursty_longtail_trace,
                                  imbalanced_trace, make_trace,
+                                 multichip_imbalanced_trace,
                                  poisson_trace, skewed_longtail_trace,
                                  uniform_trace)
 
@@ -22,5 +23,5 @@ __all__ = [
     "KVTransferCost", "Migration", "MigrationPlanner",
     "TenantProfile", "make_trace", "poisson_trace",
     "bursty_longtail_trace", "skewed_longtail_trace",
-    "imbalanced_trace", "uniform_trace",
+    "imbalanced_trace", "multichip_imbalanced_trace", "uniform_trace",
 ]

@@ -46,6 +46,7 @@ from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.configs.base import MigrationConfig, ModelConfig
+from repro.kernels.quantize import INT8_CODE_BYTES, INT8_SCALE_BYTES
 from repro.serve.engine import Request
 
 # (group index, part index); part None = no part preference
@@ -85,11 +86,23 @@ class KVTransferCost:
     stall ticks charged to the destination part; a non-positive
     bandwidth prices every transfer at infinity, which makes every live
     migration fail its amortization check.
+
+    ``quantized`` ships the cache in the int8 wire layout of
+    ``repro.kernels.quantize`` — one int8 code per entry plus one fp32
+    scale per row — so transfer bytes drop ~4x against bf16 and live
+    moves that a given bandwidth vetoed start amortizing.
     """
     # defaults mirror MigrationConfig — the planner always rebuilds this
     # from the config, so the config is the single source of truth
     link_bandwidth: float = MigrationConfig.link_bandwidth
     dtype_bytes: int = MigrationConfig.kv_dtype_bytes
+    quantized: bool = MigrationConfig.quantized_kv
+
+    def _cache_bytes(self, rows: int, row_width: int) -> int:
+        """Bytes for ``rows`` cache-dtype rows of ``row_width`` entries."""
+        if self.quantized:
+            return rows * (row_width * INT8_CODE_BYTES + INT8_SCALE_BYTES)
+        return rows * row_width * self.dtype_bytes
 
     def kv_bytes(self, seq_len: int, model_cfg: ModelConfig,
                  window: Optional[int] = None) -> int:
@@ -102,15 +115,17 @@ class KVTransferCost:
             if kind == "attn":
                 span = cached if model_cfg.attn_window is None \
                     else min(cached, model_cfg.attn_window)
-                total += 2 * model_cfg.num_kv_heads * d * span \
-                    * self.dtype_bytes
+                # K and V: one cache-dtype row of num_kv_heads * d per
+                # cached position each
+                total += self._cache_bytes(2 * span,
+                                           model_cfg.num_kv_heads * d)
             elif kind == "ssm":
                 ssm = model_cfg.ssm
                 if ssm is not None:
                     # SSMState: conv tail (d_conv-1, d_inner) in the
                     # cache dtype, scan state h in float32
                     di = ssm.expand * model_cfg.d_model
-                    total += (ssm.d_conv - 1) * di * self.dtype_bytes
+                    total += self._cache_bytes(ssm.d_conv - 1, di)
                     total += di * ssm.d_state * 4
             elif kind == "rglru":
                 rg = model_cfg.rglru
@@ -119,13 +134,20 @@ class KVTransferCost:
                 conv = rg.conv_width if rg else 4
                 # RGLRUState: conv tail (conv_width-1, W) in the cache
                 # dtype, hidden h (W,) in float32
-                total += (conv - 1) * w * self.dtype_bytes
+                total += self._cache_bytes(conv - 1, w)
                 total += w * 4
         return total
 
     def stall_ticks(self, seq_len: int, model_cfg: ModelConfig,
-                    window: Optional[int] = None) -> float:
-        """Wall ticks the destination part stalls for one transfer."""
+                    window: Optional[int] = None,
+                    src: Optional[int] = None,
+                    dst: Optional[int] = None) -> float:
+        """Wall ticks the destination part stalls for one transfer.
+
+        ``src``/``dst`` (group indices) are accepted so distance-aware
+        subclasses (``repro.cluster.TieredTransferCost``) can price by
+        the tier of the pair; the flat model ignores them.
+        """
         if self.link_bandwidth <= 0:
             return math.inf
         return math.ceil(
@@ -187,13 +209,16 @@ class MigrationPlanner:
     """
 
     def __init__(self, cfg: MigrationConfig, model_cfg: ModelConfig,
-                 long_threshold: int = 24, window: Optional[int] = None):
+                 long_threshold: int = 24, window: Optional[int] = None,
+                 cost: Optional[KVTransferCost] = None):
         self.cfg = cfg
         self.model_cfg = model_cfg
         self.long_threshold = long_threshold
         self.window = window
-        self.cost = KVTransferCost(link_bandwidth=cfg.link_bandwidth,
-                                   dtype_bytes=cfg.kv_dtype_bytes)
+        self.cost = cost if cost is not None else KVTransferCost(
+            link_bandwidth=cfg.link_bandwidth,
+            dtype_bytes=cfg.kv_dtype_bytes,
+            quantized=cfg.quantized_kv)
         # counters surfaced in FleetTelemetry.summary
         self.plan_ticks = 0
         self.planned = 0
@@ -202,6 +227,9 @@ class MigrationPlanner:
         self.rejected_amortization = 0
         self.stall_ticks_charged = 0
         self._drain: Dict[int, Tuple[int, int]] = {}   # gi -> (tick, done)
+        # expected ticks-to-drain per group, refreshed each plan tick —
+        # the pressure view routers consult for admission spill
+        self._pressure: Dict[int, float] = {}
 
     # -- telemetry -------------------------------------------------------------
 
@@ -214,6 +242,19 @@ class MigrationPlanner:
             "rejected_amortization": self.rejected_amortization,
             "stall_ticks_charged": self.stall_ticks_charged,
         }
+
+    # -- the pressure view (router admission spill) ----------------------------
+
+    def pressure(self) -> Dict[int, float]:
+        """Expected ticks-to-drain per group, as of the last plan tick.
+
+        The same donor-urgency signal :meth:`_plan_steals` ranks by
+        (queue depth over recent drain rate), exported so routers can
+        spill *admissions* off a hot group before its queue overflows —
+        steals then only handle the residual.  Empty until the first
+        plan tick.
+        """
+        return self._pressure
 
     # -- snapshots -------------------------------------------------------------
 
@@ -254,11 +295,21 @@ class MigrationPlanner:
         res: Set[Addr] = set(reserved or ())
         views = [self._view(tick, gi, g, res)
                  for gi, g in enumerate(groups)]
+        self._pressure = {v.gi: v.queue_len / max(v.drain_rate, 1e-3)
+                          if v.queue_len else 0.0 for v in views}
         plans = self._plan_steals(views, groups)
         if self.cfg.live:
             plans += self._plan_live(views, groups, res)
         self.planned += len(plans)
         return plans
+
+    def _recip_priority(self, v: _GroupView) -> Tuple:
+        """Recipient ordering key (higher first): most free slots.
+
+        Overridable — the cluster planner boosts gathered region groups
+        so tail work lands on the slices reserved for it.
+        """
+        return (v.total_free,)
 
     def _plan_steals(self, views: List[_GroupView],
                      groups: Sequence) -> List[Migration]:
@@ -276,7 +327,7 @@ class MigrationPlanner:
             (v for v in views
              if v.total_free > 0 and v.queue_len < v.total_free
              and v.queue_len <= thresh),
-            key=lambda v: v.total_free, reverse=True)
+            key=self._recip_priority, reverse=True)
         plans: List[Migration] = []
         budget = self.cfg.max_steals
         for donor in donors:
@@ -348,7 +399,6 @@ class MigrationPlanner:
         ``dst_slots * (stall + remaining)`` slot-steps hosting it.
         """
         seq_len = len(victim.prompt) + len(victim.generated)
-        stall = self.cost.stall_ticks(seq_len, self.model_cfg, self.window)
         saved = slots * (rem[0] - rem[1])
         fused = float(sum(donor.topology)) * max(rem[0], 1.0)
         best: Optional[Migration] = None
@@ -356,6 +406,10 @@ class MigrationPlanner:
         for v in views:
             if v.gi == donor.gi:
                 continue
+            # the stall is per destination *group*: a tiered cost model
+            # (repro.cluster) prices a same-chip hop differently from a
+            # cross-chip or cross-node one; the flat model is constant
+            stall = self._stall_ticks(seq_len, donor.gi, v.gi)
             for qi, dslots in enumerate(v.topology):
                 if (v.gi, qi) in reserved or v.free[qi] < dslots:
                     continue       # only fully idle parts host a transfer
@@ -376,6 +430,11 @@ class MigrationPlanner:
             self.rejected_amortization += 1
         return best
 
+    def _stall_ticks(self, seq_len: int, src_gi: int, dst_gi: int) -> float:
+        """Transfer stall for moving ``seq_len`` of state src -> dst."""
+        return self.cost.stall_ticks(seq_len, self.model_cfg, self.window,
+                                     src=src_gi, dst=dst_gi)
+
     # -- execution -------------------------------------------------------------
 
     def execute(self, plans: Sequence[Migration], groups: Sequence,
@@ -389,29 +448,37 @@ class MigrationPlanner:
         """
         done = 0
         for m in plans:
-            src, dst = groups[m.src[0]], groups[m.dst[0]]
             if m.kind == STEAL:
-                idx = next((i for i, q in enumerate(src.queue)
-                            if q is m.request), None)
-                if idx is None:
-                    continue
-                del src.queue[idx]
-                dst.submit([m.request], now=now, part=m.dst[1])
-                src.stats.steals_out += 1
-                dst.stats.steals_in += 1
-                self.steals += 1
-                done += 1
+                done += self._execute_steal(m, groups, now)
             else:
-                if m.dst[1] is None or not dst.can_insert(m.dst[1]):
-                    continue
-                row = src.extract_live(m.request)
-                if row is None:
-                    continue
-                state, last = row
-                ok = dst.insert_live(m.request, state, last,
-                                     part=m.dst[1], stall=m.stall)
-                assert ok, "insert_live failed after can_insert passed"
-                self.live_migrations += 1
-                self.stall_ticks_charged += m.stall
-                done += 1
+                done += self._execute_live(m, groups)
         return done
+
+    def _execute_steal(self, m: Migration, groups: Sequence,
+                       now: int) -> int:
+        src, dst = groups[m.src[0]], groups[m.dst[0]]
+        idx = next((i for i, q in enumerate(src.queue)
+                    if q is m.request), None)
+        if idx is None:
+            return 0
+        del src.queue[idx]
+        dst.submit([m.request], now=now, part=m.dst[1])
+        src.stats.steals_out += 1
+        dst.stats.steals_in += 1
+        self.steals += 1
+        return 1
+
+    def _execute_live(self, m: Migration, groups: Sequence) -> int:
+        src, dst = groups[m.src[0]], groups[m.dst[0]]
+        if m.dst[1] is None or not dst.can_insert(m.dst[1]):
+            return 0
+        row = src.extract_live(m.request)
+        if row is None:
+            return 0
+        state, last = row
+        ok = dst.insert_live(m.request, state, last,
+                             part=m.dst[1], stall=m.stall)
+        assert ok, "insert_live failed after can_insert passed"
+        self.live_migrations += 1
+        self.stall_ticks_charged += m.stall
+        return 1

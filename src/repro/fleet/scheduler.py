@@ -135,6 +135,37 @@ def route_length_aware(req: Request, groups: Sequence[ReconfigurableGroup],
     return gi, fit_part(topo, is_long)
 
 
+def _spill(gi: int, groups: Sequence[ReconfigurableGroup],
+           state: Dict) -> int:
+    """Admission spill: reroute off ``gi`` when its pressure is hot.
+
+    Closes the router/planner loop: the engine publishes its
+    ``MigrationPlanner`` into the router state, and any pinned-group
+    router consults the planner's pressure view (expected ticks-to-
+    drain) before committing an admission.  When the pinned group's
+    pressure exceeds ``MigrationConfig.spill_threshold`` the admission
+    goes to the least-pressured group instead — so steals only handle
+    the residual imbalance instead of re-homing requests the router
+    could have placed right the first time.  Returns the (possibly
+    unchanged) group index.
+    """
+    planner = state.get("planner")
+    thresh = state.get("spill_threshold", 0.0)
+    if planner is None or thresh <= 0:
+        return gi
+    p = planner.pressure()
+    if p.get(gi, 0.0) <= thresh:
+        return gi
+    gj = min(range(len(groups)),
+             key=lambda i: (p.get(i, 0.0), groups[i].load(),
+                            _lru(state, i), i))
+    if gj == gi or p.get(gj, 0.0) >= p.get(gi, 0.0):
+        return gi                  # nowhere strictly cooler to spill to
+    state["spills"] = state.get("spills", 0) + 1
+    _mark_assigned(state, gj)
+    return gj
+
+
 def route_sticky(req: Request, groups: Sequence[ReconfigurableGroup],
                  state: Dict):
     """Shard-affinity routing: ``Request.shard`` pins the group.
@@ -142,10 +173,11 @@ def route_sticky(req: Request, groups: Sequence[ReconfigurableGroup],
     The session/cache-affinity pattern that creates the imbalance the
     migration planner exists to fix — a hot shard's group overflows
     while its neighbors starve.  Unsharded requests fall back to
-    least-loaded.
+    least-loaded.  With ``MigrationConfig.spill_threshold`` set, a
+    pinned admission spills off a hot group via :func:`_spill`.
     """
     if req.shard is not None:
-        return req.shard % len(groups), None
+        return _spill(req.shard % len(groups), groups, state), None
     return route_least_loaded(req, groups, state)
 
 
@@ -234,6 +266,12 @@ class FleetEngine:
             fleet.migrate, model_cfg,
             long_threshold=fleet.long_threshold,
             window=fleet.window) if fleet.migrate.enabled else None
+        if self.planner is not None:
+            # close the router/planner loop: routers consult the
+            # planner's pressure view for admission spill (see _spill)
+            self._router_state["planner"] = self.planner
+            self._router_state["spill_threshold"] = \
+                fleet.migrate.spill_threshold
         # the chip-level controller runs whenever any chip-wide concern
         # exists: split-mix rebalancing, migration planning, or a
         # quarantine reservation to maintain
@@ -280,6 +318,16 @@ class FleetEngine:
             gi, pi = dest if isinstance(dest, tuple) else (dest, None)
             self.groups[gi].submit([r], now=self.wall, part=pi)
 
+    def _next_event(self) -> Optional[int]:
+        """Tick of the next externally scheduled event, or None.
+
+        The idle fast-forward target: the base engine only has pending
+        arrivals; subclasses with other deferred events (the cluster
+        engine's in-flight cross-chip transfers) fold them in here so
+        an idle fleet never terminates with work still in the air.
+        """
+        return self._pending[0][0] if self._pending else None
+
     # -- main loop ----------------------------------------------------------------
 
     def run(self, dynamic: bool = True,
@@ -299,13 +347,13 @@ class FleetEngine:
                         for g in self.groups]
             ticked = sum(s == TICKED for s in statuses)
             if all(s == IDLE for s in statuses):
-                if not self._pending:
+                nxt_evt = self._next_event()
+                if nxt_evt is None:
                     # terminal probe: the trace is drained, not an idle tick
                     break
-                # fast-forward the idle gap to the next arrival, never
+                # fast-forward the idle gap to the next event, never
                 # past the caller's tick bound
-                nxt = min(max(self.wall + 1, self._pending[0][0]),
-                          max_ticks)
+                nxt = min(max(self.wall + 1, nxt_evt), max_ticks)
                 self.telemetry.on_tick(self.wall, self.groups, 0,
                                        all_idle=True)
                 self.telemetry.on_idle_gap(nxt - self.wall - 1,
@@ -318,7 +366,8 @@ class FleetEngine:
             g.finalize()
         return self.telemetry.summary(self.groups, self.requests,
                                       policy=self.policy,
-                                      fleet_controller=self.controller)
+                                      fleet_controller=self.controller,
+                                      router_state=self._router_state)
 
     # -- aggregates -------------------------------------------------------------
 

@@ -143,7 +143,8 @@ class FleetTelemetry:
         return np.asarray(lats, np.float64)
 
     def summary(self, groups, requests: Sequence[Request],
-                policy=None, fleet_controller=None) -> Dict:
+                policy=None, fleet_controller=None,
+                router_state: Optional[Dict] = None) -> Dict:
         snaps = [GroupSnapshot(
             gid=g.gid, mode=g.mode, is_split=g.is_split,
             queue_depth=len(g.queue), live=len(g.live_requests()),
@@ -210,6 +211,10 @@ class FleetTelemetry:
             if reserved is not None and fleet_controller.quarantine is not None:
                 control["reserved_parts"] = sorted(
                     list(a) for a in reserved(groups))
+        if router_state is not None and "planner" in router_state:
+            # the router/planner loop: pinned admissions rerouted off hot
+            # groups via the planner's pressure view (scheduler._spill)
+            control["admission_spills"] = router_state.get("spills", 0)
         out["control"] = control
         planner = getattr(fleet_controller, "planner", None)
         if planner is not None:
@@ -217,6 +222,11 @@ class FleetTelemetry:
             mig["stall_ticks"] = sum(
                 getattr(g.stats, "stall_ticks", 0) for g in groups)
             out["migration"] = mig
+        # the cluster layer (repro.cluster): per-chip pressure, regions,
+        # and per-tier byte/stall traffic from the tiered planner
+        cluster_summary = getattr(fleet_controller, "cluster_summary", None)
+        if cluster_summary is not None:
+            out["cluster"] = cluster_summary(groups)
         tenants = sorted({r.tenant for r in requests})
         if len(tenants) > 1:
             out["per_tenant"] = {}

@@ -180,6 +180,43 @@ def imbalanced_trace(horizon: int, vocab_size: int, seed: int = 0,
     return make_trace(profs, horizon, vocab_size, seed)
 
 
+def multichip_imbalanced_trace(horizon: int, vocab_size: int, seed: int = 0,
+                               chips: int = 2, groups_per_chip: int = 2,
+                               hot_chip: int = 0,
+                               hot_rate: float = 0.9,
+                               warm_rate: float = 0.25,
+                               cold_rate: float = 0.04,
+                               p_long: float = 0.35) -> List[Request]:
+    """Chip-skewed load for the hierarchical (cluster) scheduler.
+
+    One shard per group (``shards = chips * groups_per_chip``); the
+    arrival mass hammers ``hot_chip``: its first group takes a bursty
+    fat-long-tail stream, its chipmates a warm medium stream, while
+    every group on the other chips barely trickles.  Under sticky
+    routing the hot chip overflows as a unit — its chipmates can absorb
+    some excess over the fast intra-chip NoC, but the residual must
+    cross slow inter-chip links, which is exactly the regime where
+    distance-blind stealing thrashes and ``repro.cluster``'s tiered
+    controller pays.  Used by the ``cluster_hierarchy`` sweep in
+    ``benchmarks/fleet_bench.py``.
+    """
+    profs = []
+    for s in range(chips * groups_per_chip):
+        chip, local = divmod(s, groups_per_chip)
+        if chip == hot_chip and local == 0:
+            rate, long_tok, pl_, burst = hot_rate, 48, p_long, 3.0
+        elif chip == hot_chip:
+            rate, long_tok, pl_, burst = warm_rate, 32, p_long / 2, 1.5
+        else:
+            rate, long_tok, pl_, burst = cold_rate, 12, 0.1, 1.0
+        profs.append(TenantProfile(
+            name=f"chip{chip}g{local}", rate=rate,
+            length_dist="bimodal", short_tokens=3, long_tokens=long_tok,
+            p_long=pl_, burst_factor=burst,
+            burst_period=50, burst_duty=0.3, shard=s))
+    return make_trace(profs, horizon, vocab_size, seed)
+
+
 def uniform_trace(rate: float, horizon: int, vocab_size: int,
                   seed: int = 0, tokens: int = 12) -> List[Request]:
     """Near-lockstep lengths — the regime where fused should win."""

@@ -14,6 +14,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# wire layout of the int8 path: one int8 code per entry plus one float32
+# scale per row (the (T, 1) scale tensor of quantize_int8_pallas).  The
+# KV-migration cost model (repro.fleet.migrate.KVTransferCost) prices
+# quantized transfers from these, so the bytes-on-the-wire estimate and
+# the kernel's actual layout cannot drift apart.
+INT8_CODE_BYTES = 1
+INT8_SCALE_BYTES = 4
+
 
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                     # (bt, D)

@@ -1,0 +1,453 @@
+"""Hierarchical cluster layer (repro.cluster): mesh, tiers, control.
+
+Geometry and tier pricing are pure-function tests; planner and
+controller behavior runs against the protocol fakes from
+``fake_fleet.py`` (no model); the end-to-end section drives a real
+:class:`~repro.cluster.ClusterEngine` to pin books-balance with
+in-flight cross-chip transfers and the telemetry cluster block.  The
+same conservation invariants are fuzzed in
+``test_migrate_properties.py``.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from fake_fleet import FakeGroup, all_requests
+from repro.cluster import (ClusterController, ClusterEngine, ClusterMesh,
+                           ClusterPlanner, RegionManager, TieredTransferCost)
+from repro.configs import get_config
+from repro.configs.base import (AmoebaConfig, ClusterConfig, FleetConfig,
+                                MigrationConfig)
+from repro.control import (ConfigSpace, GroupController, ThresholdPolicy)
+from repro.fleet import multichip_imbalanced_trace
+from repro.fleet.migrate import LIVE, STEAL
+from repro.models import transformer as T
+from repro.serve import Request
+
+AMOEBA = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                      min_phase_steps=2)
+
+
+def model_cfg():
+    return get_config("qwen3-14b", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = model_cfg()
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def req(rid, tokens, generated=0, plen=4):
+    r = Request(rid, [1] * plen, tokens)
+    r.generated = [0] * generated
+    return r
+
+
+# a 2x2-chip playground: 4 groups, 2 per chip, all on one node
+MESH4 = ClusterMesh(num_groups=4, groups_per_chip=2)
+
+
+def cplanner(ccfg=None, mesh=MESH4, **kw):
+    kw.setdefault("enabled", True)
+    ccfg = ccfg or ClusterConfig(groups_per_chip=mesh.groups_per_chip)
+    cfg = MigrationConfig(**kw)
+    cost = TieredTransferCost.from_config(
+        mesh, ccfg, dtype_bytes=cfg.kv_dtype_bytes,
+        quantized=cfg.quantized_kv)
+    return ClusterPlanner(cfg, model_cfg(), mesh=mesh, cost=cost,
+                          ccfg=ccfg, long_threshold=24, window=256)
+
+
+# -- mesh geometry -------------------------------------------------------------
+
+def test_mesh_partition_and_counts():
+    m = ClusterMesh(num_groups=8, groups_per_chip=4, chips_per_node=1)
+    assert m.num_chips == 2 and m.num_nodes == 2
+    assert m.chip_of(0) == 0 and m.chip_of(4) == 1
+    assert m.chip_groups(1) == [4, 5, 6, 7]
+    # ragged tail: the last chip holds the remainder
+    r = ClusterMesh(num_groups=5, groups_per_chip=4)
+    assert r.num_chips == 2 and r.chip_groups(1) == [4]
+
+
+def test_mesh_coords_are_unique_and_hops_metric():
+    m = ClusterMesh(num_groups=8, groups_per_chip=4)
+    coords = [m.coord(g) for g in range(8)]
+    assert len(set(coords)) == 8
+    for a in range(8):
+        assert m.hops(a, a) == 0
+        for b in range(8):
+            assert m.hops(a, b) == m.hops(b, a) >= (a != b)
+    with pytest.raises(IndexError):
+        m.coord(8)
+
+
+def test_mesh_tiers_and_adjacency():
+    m = ClusterMesh(num_groups=8, groups_per_chip=4, chips_per_node=1)
+    assert m.tier(0, 0) == "self"
+    assert m.tier(0, 1) == "noc"          # same chip
+    assert m.tier(0, 4) == "net"          # one chip per node: crossings net
+    one_node = ClusterMesh(num_groups=8, groups_per_chip=4)
+    assert one_node.tier(0, 4) == "link"  # same node: board-level link
+    # adjacency: same-chip nearest neighbors only (the region criterion)
+    assert m.adjacent(0, 1) and m.adjacent(0, 2)
+    assert not m.adjacent(0, 3)           # diagonal: two hops
+    assert not m.adjacent(3, 4)           # chip boundary, whatever the hops
+    assert not m.adjacent(2, 2)
+    assert "chip 0" in m.describe() and "chip 1" in m.describe()
+
+
+def test_mesh_validation():
+    with pytest.raises(ValueError):
+        ClusterMesh(num_groups=0, groups_per_chip=2)
+    with pytest.raises(ValueError):
+        ClusterMesh(num_groups=4, groups_per_chip=2, chips_per_node=0)
+
+
+# -- tiered transfer cost ------------------------------------------------------
+
+def test_tier_pricing_orders_by_distance():
+    m = ClusterMesh(num_groups=8, groups_per_chip=4, chips_per_node=1)
+    c = TieredTransferCost(mesh=m, noc_bandwidth=1e9, noc_latency=0.0,
+                           link_bandwidth=100.0, link_latency=2.0,
+                           net_bandwidth=50.0, net_latency=4.0)
+    nbytes = 1000
+    noc = c.transfer_ticks(nbytes, 0, 1)
+    net = c.transfer_ticks(nbytes, 0, 4)
+    assert noc == 0                       # sub-tick NoC hop: free
+    assert net >= 4 + nbytes / 50.0 - 1   # hop latency + slow wire
+    assert c.transfer_ticks(nbytes, 3, 3) == 0.0
+    # farther pairs on the same tier pay more hops
+    assert c.transfer_ticks(nbytes, 0, 7) > c.transfer_ticks(nbytes, 3, 4)
+
+
+def test_zero_tier_bandwidth_is_infinite_and_flat_fallback_holds():
+    cfg = model_cfg()
+    m = ClusterMesh(num_groups=4, groups_per_chip=2)
+    c = TieredTransferCost(mesh=m, noc_bandwidth=4e9,
+                           link_bandwidth=0.0, net_bandwidth=0.0)
+    assert math.isinf(c.transfer_ticks(100, 0, 2))
+    assert c.transfer_ticks(100, 0, 1) == 0          # noc unaffected
+    assert math.isinf(c.stall_ticks(16, cfg, src=0, dst=2))
+    # without src/dst the parent's flat link pricing applies
+    flat = TieredTransferCost(mesh=m, link_bandwidth=100.0)
+    assert flat.transfer_ticks(1000, None, None) == 10
+    assert math.isinf(c.transfer_ticks(1000, None, None))
+
+
+def test_integer_latency_does_not_round_up_on_float_dust():
+    m = ClusterMesh(num_groups=4, groups_per_chip=2)
+    c = TieredTransferCost(mesh=m, link_bandwidth=2e8, link_latency=1.0)
+    # 0 -> 2 is two hops: 2 latency ticks + a vanishing bandwidth term
+    assert m.hops(0, 2) == 2
+    assert c.transfer_ticks(16, 0, 2) == 2
+
+
+def test_steal_ticks_price_the_prompt_not_the_kv():
+    c = TieredTransferCost(mesh=MESH4, link_bandwidth=8.0, link_latency=0.0)
+    # 0 -> 2: two hops, free latency; 4 tokens * 4B / 8 Bpt = 2 ticks
+    assert c.steal_ticks(4, 0, 2) == 2
+    assert c.steal_ticks(4, 0, 1) == 0    # noc absorbs it sub-tick
+
+
+# -- planner: chip-first stealing ----------------------------------------------
+
+def test_steals_resolve_on_chip_first_then_amortized_residual_crosses():
+    donor = FakeGroup(0, (4,), queue=[req(i, 4) for i in range(6)])
+    mate = FakeGroup(1, (4,))
+    far = FakeGroup(2, (4,))
+    far2 = FakeGroup(3, (4,))
+    groups = [donor, mate, far, far2]
+    before = sorted(r.rid for r in all_requests(groups))
+    p = cplanner(steal_threshold=1, max_steals=2)
+    plans = p.plan(0, groups)
+    # the chip phase fills the chipmate, the residual crosses
+    intra = [m for m in plans if m.dst[0] == 1]
+    cross = [m for m in plans if m.dst[0] in (2, 3)]
+    assert len(intra) == 2 and len(cross) == 2
+    assert {m.request.rid for m in intra}.isdisjoint(
+        {m.request.rid for m in cross})
+    assert all(m.gain > 0 and m.stall > 0 for m in cross)
+    assert p.execute(plans, groups, now=0) == 4
+    # intra-chip lands instantly; cross-chip is in the air
+    assert p.intra_chip_steals == 2 and p.cross_chip_steals == 2
+    assert mate.stats.steals_in == 2
+    assert far.stats.steals_in == 0 and len(p.in_flight_requests()) == 2
+    assert p.tier_bytes["noc"] > 0 and p.tier_bytes["link"] > 0
+    # conservation must count the requests in flight
+    now = sorted(r.rid for r in all_requests(groups)
+                 + p.in_flight_requests())
+    assert now == before
+    # delivery: nothing before the arrival tick, everything at it
+    t = p.next_arrival()
+    assert t is not None and t > 0
+    assert p.deliver_in_flight(t - 1, groups) == 0
+    assert p.deliver_in_flight(t, groups) == 2
+    assert far.stats.steals_in + far2.stats.steals_in == 2
+    assert p.next_arrival() is None
+    assert sorted(r.rid for r in all_requests(groups)) == before
+
+
+def test_zero_interchip_bandwidth_vetoes_crossings_but_noc_flows():
+    ccfg = ClusterConfig(groups_per_chip=2, link_bandwidth=0.0,
+                         net_bandwidth=0.0)
+    donor = FakeGroup(0, (4,), queue=[req(i, 4) for i in range(6)])
+    groups = [donor, FakeGroup(1, (4,)), FakeGroup(2, (4,)),
+              FakeGroup(3, (4,))]
+    p = cplanner(ccfg=ccfg, steal_threshold=1, max_steals=2)
+    plans = p.plan(0, groups)
+    assert plans and all(m.dst[0] == 1 for m in plans)
+    assert p.vetoed_cross_chip > 0
+    assert p.execute(plans, groups, now=0) == len(plans)
+    assert p.intra_chip_steals == 2 and p.cross_chip_steals == 0
+    assert p.in_flight_requests() == []
+
+
+def test_cross_steal_budget_caps_crossings():
+    ccfg = ClusterConfig(groups_per_chip=2, max_cross_steals=1)
+    donor = FakeGroup(0, (4,), queue=[req(i, 4) for i in range(8)])
+    groups = [donor, FakeGroup(1, (4,)), FakeGroup(2, (4,)),
+              FakeGroup(3, (4,))]
+    p = cplanner(ccfg=ccfg, steal_threshold=1, max_steals=2)
+    plans = p.plan(0, groups)
+    assert sum(m.dst[0] in (2, 3) for m in plans) == 1
+
+
+def test_live_migration_prefers_the_noc_destination():
+    lives = [req(0, 60, generated=1), req(1, 3, generated=1),
+             req(2, 3, generated=1), req(3, 3, generated=1)]
+    donor = FakeGroup(0, (4,), parts=[lives])
+    mate = FakeGroup(1, (2, 2))
+    far = FakeGroup(3, (2, 2))
+    groups = [donor, mate, FakeGroup(2, (1,), parts=[[req(9, 5)]]), far]
+    p = cplanner(live=True, min_gain=0.02)
+    plans = [m for m in p.plan(0, groups) if m.kind == LIVE]
+    assert len(plans) == 1
+    m = plans[0]
+    # identical free capacity either side of the chip boundary: the
+    # same-chip hop stalls less, so it wins the amortized gain
+    assert m.dst[0] == 1 and m.stall == 0
+    assert p.execute(plans, groups, now=0) == 1
+    assert p.intra_chip_live == 1 and p.cross_chip_live == 0
+
+
+def test_distance_blind_planning_pays_tiered_prices_at_execution():
+    # the A/B baseline: one flat pool at plan time, physics at runtime
+    ccfg = ClusterConfig(groups_per_chip=2, distance_blind=True)
+    donor = FakeGroup(0, (4,), queue=[req(i, 4) for i in range(6)])
+    groups = [donor, FakeGroup(1, (1,), parts=[[req(8, 9)]]),
+              FakeGroup(2, (4,)), FakeGroup(3, (4,))]
+    p = cplanner(ccfg=ccfg, steal_threshold=1, max_steals=2)
+    plans = p.plan(0, groups)
+    # the blind plan happily targets the far chip (sole free recipient)
+    assert plans and all(m.dst[0] in (2, 3) for m in plans)
+    assert all(m.stall == 0 for m in plans)          # ...priced flat
+    assert p.execute(plans, groups, now=0) == len(plans)
+    # ...but the steal still flies the slow link, not a free teleport
+    assert p.cross_chip_steals == len(plans)
+    assert len(p.in_flight_requests()) == len(plans)
+    assert p.next_arrival() > 0
+
+
+def test_blind_plan_across_dead_link_is_dropped_not_teleported():
+    ccfg = ClusterConfig(groups_per_chip=2, distance_blind=True,
+                         link_bandwidth=0.0, net_bandwidth=0.0)
+    donor = FakeGroup(0, (4,), queue=[req(i, 4) for i in range(6)])
+    groups = [donor, FakeGroup(1, (1,), parts=[[req(8, 9)]]),
+              FakeGroup(2, (4,)), FakeGroup(3, (4,))]
+    before = sorted(r.rid for r in all_requests(groups))
+    p = cplanner(ccfg=ccfg, steal_threshold=1, max_steals=2)
+    plans = p.plan(0, groups)
+    assert plans and all(m.dst[0] in (2, 3) for m in plans)
+    assert p.execute(plans, groups, now=0) == 0
+    assert p.dropped_unreachable == len(plans)
+    # the victims never left the donor's queue
+    assert sorted(r.rid for r in all_requests(groups)) == before
+    assert len(donor.queue) == 6
+
+
+def test_region_groups_are_boosted_steal_recipients():
+    donor = FakeGroup(0, (4,), queue=[req(i, 40) for i in range(4)])
+    a, b = FakeGroup(1, (4,)), FakeGroup(2, (2, 2))
+    p = cplanner(mesh=ClusterMesh(num_groups=3, groups_per_chip=3),
+                 ccfg=ClusterConfig(groups_per_chip=3),
+                 steal_threshold=1, max_steals=2)
+    base = p.plan(0, [donor, a, b])
+    assert all(m.dst[0] == 1 for m in base)          # most free slots wins
+    p.set_regions([2])
+    boosted = p.plan(1, [donor, a, b])
+    assert all(m.dst[0] == 2 for m in boosted)       # region outranks free
+
+
+# -- region gather -------------------------------------------------------------
+
+class _RegionGroup(FakeGroup):
+    """FakeGroup plus the GroupController surface regions drive."""
+
+    def __init__(self, gid, topology, queue=(), parts=None,
+                 capacity=4, max_ways=2):
+        super().__init__(gid, topology, queue=queue, parts=parts)
+        self.controller = GroupController(
+            ThresholdPolicy(0.95, 0.0),
+            ConfigSpace(capacity, max_ways=max_ways), dwell=1)
+
+
+def _region_fleet(long_tokens=60):
+    hot = [_RegionGroup(0, (4,), parts=[[req(0, long_tokens, generated=1)]]),
+           _RegionGroup(1, (4,), parts=[[req(1, long_tokens, generated=1)]])]
+    cold = [_RegionGroup(2, (4,)), _RegionGroup(3, (4,))]
+    return hot + cold
+
+
+def test_region_gathers_deepens_and_releases():
+    ccfg = ClusterConfig(groups_per_chip=2, region_dwell=4,
+                         region_long_frac=0.5, region_release_frac=0.2)
+    rm = RegionManager(MESH4, ccfg, long_threshold=24)
+    groups = _region_fleet()
+    deep = RegionManager.deep_topology(groups[0].controller.space)
+    assert deep == (2, 2)
+    assert rm.step(0, groups, {0: 0.9, 1: 0.0}) > 0
+    assert rm.region_groups() == {0, 1}
+    assert groups[0].controller._hint == deep
+    assert groups[1].controller._hint == deep
+    assert groups[2].controller._hint is None        # cold chip untouched
+    assert rm.gathered == 1 and rm.summary()["active"] == [[0, 1]]
+    # drained early: the dwell clock holds the region open
+    assert rm.step(2, groups, {0: 0.0}) >= 0
+    assert rm.region_groups() == {0, 1}
+    # drained past the dwell: members hinted back to fused and freed
+    rm.step(6, groups, {0: 0.0})
+    assert rm.region_groups() == frozenset()
+    assert rm.released == 1
+    assert groups[0].controller._hint == (4,)
+
+
+def test_region_reasserts_deep_hint_against_mix_drift():
+    ccfg = ClusterConfig(groups_per_chip=2, region_dwell=4)
+    rm = RegionManager(MESH4, ccfg, long_threshold=24)
+    groups = _region_fleet()
+    rm.step(0, groups, {0: 0.9})
+    # a later mix nudge overwrote the hint; the region wins it back
+    groups[0].controller._hint = None
+    assert rm.step(1, groups, {0: 0.9}) > 0
+    assert groups[0].controller._hint == (2, 2)
+
+
+def test_region_excludes_the_quarantine_group():
+    ccfg = ClusterConfig(groups_per_chip=2, region_max_groups=2)
+    rm = RegionManager(MESH4, ccfg, long_threshold=24)
+    groups = _region_fleet()
+    rm.step(0, groups, {0: 0.9}, quarantine=0)
+    assert rm.region_groups() == {1}
+
+
+def test_region_needs_long_mass_not_just_a_hot_frac():
+    rm = RegionManager(MESH4, ClusterConfig(groups_per_chip=2),
+                       long_threshold=24)
+    groups = [_RegionGroup(i, (4,)) for i in range(4)]   # nothing long
+    assert rm.step(0, groups, {0: 0.9, 1: 0.9}) == 0
+    assert rm.region_groups() == frozenset()
+
+
+# -- cluster controller --------------------------------------------------------
+
+def _controller(num_groups=4, groups_per_chip=2, quarantine=None,
+                rebalance_every=4, region_gather=False):
+    mesh = ClusterMesh(num_groups=num_groups,
+                       groups_per_chip=groups_per_chip)
+    ccfg = ClusterConfig(groups_per_chip=groups_per_chip,
+                         region_gather=region_gather)
+    fleet = FleetConfig(num_groups=num_groups, capacity=4, mode="dynamic",
+                        rebalance_every=rebalance_every,
+                        quarantine_group=quarantine,
+                        migrate=MigrationConfig(enabled=True),
+                        amoeba=AMOEBA)
+    return ClusterController(mesh, ccfg, fleet, model_cfg())
+
+
+def test_controller_gates_on_rebalance_cadence():
+    cc = _controller(rebalance_every=4)
+    groups = [_RegionGroup(i, (4,)) for i in range(4)]
+    cc.rebalance(1, groups)
+    assert cc.planner.plan_ticks == 0 and cc.chip_pressure == {}
+    cc.rebalance(4, groups)
+    assert cc.planner.plan_ticks == 1
+    assert sorted(cc.chip_pressure) == [0, 1]
+
+
+def test_controller_tracks_per_chip_pressure():
+    cc = _controller()
+    hot = [_RegionGroup(0, (4,), queue=[req(i, 40) for i in range(6)],
+                        parts=[[req(10, 60, generated=1)] * 1]),
+           _RegionGroup(1, (4,), parts=[[req(11, 60, generated=1)]])]
+    cold = [_RegionGroup(2, (4,)), _RegionGroup(3, (4,))]
+    cc.rebalance(0, hot + cold)
+    p0, p1 = cc.chip_pressure[0], cc.chip_pressure[1]
+    assert p0.fv.queue_frac > p1.fv.queue_frac
+    assert p0.long_frac > p1.long_frac == 0.0
+    d = p0.as_dict()
+    assert {"divergence", "queue_frac", "drain_rate", "long_frac"} \
+        <= set(d)
+
+
+def test_controller_quarantine_maps_to_the_owning_chip():
+    cc = _controller(quarantine=2)
+    assert cc.chip_controllers[0].quarantine is None
+    assert cc.chip_controllers[1].quarantine == 0    # local index on chip 1
+    groups = [_RegionGroup(i, (4,)) for i in range(4)]
+    groups[2].controller.state.topology = (3, 1)
+    assert cc.reserved_parts(groups) == {(2, 1)}
+
+
+def test_cluster_summary_shape():
+    cc = _controller(region_gather=True)
+    groups = [_RegionGroup(i, (4,)) for i in range(4)]
+    cc.rebalance(0, groups)
+    s = cc.cluster_summary(groups)
+    assert s["chips"] == 2 and s["groups_per_chip"] == 2
+    assert s["nodes"] == 1 and s["distance_blind"] is False
+    assert set(s["tier_bytes"]) == {"noc", "link", "net"}
+    assert "regions" in s and sorted(s["chip_pressure"]) == ["0", "1"]
+
+
+# -- end to end ----------------------------------------------------------------
+
+def _check_books(requests, eng):
+    assert eng.completed == len(requests)
+    assert all(r.done for r in requests)
+    assert eng.useful_tokens == sum(len(r.generated) for r in requests)
+    assert all(len(r.generated) == r.max_new_tokens for r in requests)
+
+
+def test_cluster_engine_books_and_telemetry(setup):
+    cfg, params = setup
+    trace = multichip_imbalanced_trace(horizon=40, vocab_size=cfg.vocab_size,
+                                       seed=0, chips=2, groups_per_chip=2)
+    eng = ClusterEngine(cfg, params, fleet=FleetConfig(
+        num_groups=4, capacity=4, router="sticky", mode="dynamic",
+        rebalance_every=4, migrate=MigrationConfig(enabled=True),
+        amoeba=AMOEBA, cluster=ClusterConfig(groups_per_chip=2)))
+    eng.submit(trace)
+    s = eng.run(max_ticks=3000)
+    _check_books(trace, eng)
+    # no request may end the run still in the air
+    assert eng.planner.in_flight_requests() == []
+    cl = s["cluster"]
+    assert cl["chips"] == 2 and set(cl["tier_bytes"]) == {"noc", "link",
+                                                          "net"}
+    mig = s["migration"]
+    assert mig["plan_ticks"] > 0
+    assert mig["steals"] == mig["intra_chip_steals"] \
+        + mig["cross_chip_steals"]
+    assert s["wall_ticks"] >= max(r.finish for r in trace)
+
+
+def test_cluster_engine_requires_dynamic_migrating_fleet(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="dynamic"):
+        ClusterEngine(cfg, params, fleet=FleetConfig(
+            num_groups=4, capacity=4, mode="fused", amoeba=AMOEBA))

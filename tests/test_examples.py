@@ -44,3 +44,8 @@ def test_hetero_topology_example_runs():
 def test_work_stealing_example_runs():
     _run("work_stealing.py", ["--groups", "2", "--capacity", "4",
                               "--horizon", "20"])
+
+
+def test_cluster_mesh_example_runs():
+    _run("cluster_mesh.py", ["--chips", "2", "--groups-per-chip", "2",
+                             "--capacity", "4", "--horizon", "20"])

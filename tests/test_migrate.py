@@ -65,6 +65,47 @@ def test_zero_bandwidth_prices_transfer_at_infinity():
     assert KVTransferCost(link_bandwidth=1e12).stall_ticks(16, cfg) >= 1
 
 
+def test_quantized_kv_ships_fewer_bytes():
+    """int8 wire layout: one code per entry + one fp32 scale per row."""
+    cfg = model_cfg()
+    bf16 = KVTransferCost(link_bandwidth=1e6, quantized=False)
+    int8 = KVTransferCost(link_bandwidth=1e6, quantized=True)
+    for seq in (8, 64, 512):
+        assert 0 < int8.kv_bytes(seq, cfg) < bf16.kv_bytes(seq, cfg)
+    # the saving is the dtype ratio, minus the per-row scale overhead
+    assert int8.kv_bytes(256, cfg) <= 0.85 * bf16.kv_bytes(256, cfg)
+
+
+def test_quantized_kv_flips_the_live_migration_veto():
+    """At one fixed link bandwidth, the bf16 transfer stalls too long to
+    amortize while the int8 wire layout clears the same ``min_gain`` bar
+    — the point of pricing migrations off the quantized layout."""
+    cfg = model_cfg()
+    seq_len = 5                     # plen 4 + 1 generated, see req()
+    bytes_bf = KVTransferCost(quantized=False).kv_bytes(seq_len, cfg,
+                                                        window=256)
+    bytes_q = KVTransferCost(quantized=True).kv_bytes(seq_len, cfg,
+                                                      window=256)
+    assert bytes_q <= 0.85 * bytes_bf
+    # donor (4,) with one 60-tail: saved=4*57, fused=4*60, destination
+    # (2,2) adds 2*(stall+59) -> the move amortizes iff stall < ~52
+    bw = bytes_bf / 60.0            # bf16 stalls 60 ticks: vetoed
+    lives = lambda: [req(0, 60, generated=1), req(1, 3, generated=1),
+                     req(2, 3, generated=1), req(3, 3, generated=1)]
+    p_bf = planner(live=True, min_gain=0.02, link_bandwidth=bw)
+    plans = p_bf.plan(0, [FakeGroup(0, (4,), parts=[lives()]),
+                          FakeGroup(1, (2, 2))])
+    assert not any(m.kind == LIVE for m in plans)
+    assert p_bf.rejected_amortization == 1
+    p_q = planner(live=True, min_gain=0.02, link_bandwidth=bw,
+                  quantized_kv=True)
+    plans = p_q.plan(0, [FakeGroup(0, (4,), parts=[lives()]),
+                         FakeGroup(1, (2, 2))])
+    live = [m for m in plans if m.kind == LIVE]
+    assert len(live) == 1 and live[0].gain > 0.02
+    assert live[0].stall < 60
+
+
 # -- planning against protocol fakes -------------------------------------------
 
 def test_planner_steals_overflow_to_starving_parts():
@@ -329,6 +370,30 @@ def test_live_migration_end_to_end(setup):
     ref.finalize()
     assert [tuple(r.generated) for r in reqs] \
         == [tuple(r.generated) for r in baseline]
+
+
+def test_admission_spill_reduces_stealing(setup):
+    """Closing the router/planner loop: when sticky admissions consult
+    the planner's pressure view and spill off hot groups, steals only
+    handle the residual — fewer than when every pinned admission lands
+    hot and must be re-homed after the fact."""
+    cfg, params = setup
+    steals, spills = {}, {}
+    for label, thresh in (("off", 0.0), ("on", 4.0)):
+        trace = imbalanced_trace(horizon=25, vocab_size=cfg.vocab_size,
+                                 seed=6, shards=2)
+        eng = FleetEngine(cfg, params, fleet=FleetConfig(
+            num_groups=2, capacity=4, router="sticky", mode="dynamic",
+            rebalance_every=4,
+            migrate=MigrationConfig(enabled=True, spill_threshold=thresh),
+            amoeba=AMOEBA))
+        eng.submit(trace)
+        s = eng.run()
+        _check_books(trace, eng)
+        steals[label] = s["migration"]["steals"]
+        spills[label] = s["control"]["admission_spills"]
+    assert spills["off"] == 0 and spills["on"] > 0
+    assert steals["on"] < steals["off"]
 
 
 def test_quarantine_fleet_runs_and_reports(setup):

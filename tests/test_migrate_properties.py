@@ -16,8 +16,9 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from fake_fleet import FakeGroup, all_requests
+from repro.cluster import ClusterMesh, ClusterPlanner, TieredTransferCost
 from repro.configs import get_config
-from repro.configs.base import MigrationConfig
+from repro.configs.base import ClusterConfig, MigrationConfig
 from repro.fleet.migrate import STEAL, MigrationPlanner
 from repro.serve.engine import Request
 
@@ -30,6 +31,20 @@ def _planner(**kw):
     kw.setdefault("min_gain", 0.0)
     return MigrationPlanner(MigrationConfig(**kw), MODEL_CFG,
                             long_threshold=24, window=64)
+
+
+def _cluster_planner(n_groups, ccfg=None, **kw):
+    kw.setdefault("enabled", True)
+    kw.setdefault("steal_threshold", 1)
+    kw.setdefault("min_gain", 0.0)
+    cfg = MigrationConfig(**kw)
+    mesh = ClusterMesh(num_groups=n_groups, groups_per_chip=2)
+    ccfg = ccfg or ClusterConfig(groups_per_chip=2)
+    cost = TieredTransferCost.from_config(
+        mesh, ccfg, dtype_bytes=cfg.kv_dtype_bytes,
+        quantized=cfg.quantized_kv)
+    return ClusterPlanner(cfg, MODEL_CFG, mesh=mesh, cost=cost, ccfg=ccfg,
+                          long_threshold=24, window=64)
 
 
 def _req(rid: int, tokens: int, started: bool) -> Request:
@@ -84,6 +99,54 @@ def test_zero_bandwidth_never_plans_live_migrations(groups, rounds):
         assert all(m.kind == STEAL for m in plans)
         p.execute(plans, groups, now=tick)
     assert p.live_migrations == 0
+
+
+@given(fleets(), st.floats(1e3, 1e12), st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_cluster_and_fleet_plans_conserve_requests_same_tick(groups, bw,
+                                                            rounds):
+    """A tiered cluster planner and a flat fleet planner executing in
+    the same tick — plus requests in flight on the slow links — must
+    still conserve every request and every slot budget."""
+    cp = _cluster_planner(len(groups), live=True, link_bandwidth=bw)
+    fp = _planner(live=True, link_bandwidth=bw)
+    before = sorted(r.rid for r in all_requests(groups))
+    for tick in range(rounds):
+        cp.deliver_in_flight(tick, groups)
+        cp.execute(cp.plan(tick, groups), groups, now=tick)
+        fp.execute(fp.plan(tick, groups), groups, now=tick)
+        in_air = cp.in_flight_requests()
+        after = sorted(r.rid for r in all_requests(groups)
+                       + in_air)
+        assert after == before, "request lost or duplicated"
+        assert len({id(r) for r in in_air}) == len(in_air)
+        for g in groups:
+            for i, slots in enumerate(g.topology):
+                assert len(g.part_live(i)) <= slots, \
+                    "part slot budget exceeded"
+    # flush the wire: every in-flight steal lands exactly once
+    cp.deliver_in_flight(10**9, groups)
+    assert cp.in_flight_requests() == []
+    assert sorted(r.rid for r in all_requests(groups)) == before
+
+
+@given(fleets(), st.integers(1, 3))
+@settings(max_examples=40, deadline=None)
+def test_zero_interchip_bandwidth_confines_moves_to_the_chip(groups,
+                                                             rounds):
+    """With dead inter-chip links every cross-chip steal and live
+    migration is vetoed; whatever still moves, moves over the NoC."""
+    ccfg = ClusterConfig(groups_per_chip=2, link_bandwidth=0.0,
+                         net_bandwidth=0.0)
+    cp = _cluster_planner(len(groups), ccfg=ccfg, live=True)
+    mesh = cp.mesh
+    for tick in range(rounds):
+        plans = cp.plan(tick, groups)
+        assert all(mesh.chip_of(m.src[0]) == mesh.chip_of(m.dst[0])
+                   for m in plans), "cross-chip move planned on dead link"
+        cp.execute(plans, groups, now=tick)
+    assert cp.cross_chip_steals == 0 and cp.cross_chip_live == 0
+    assert cp.in_flight_requests() == []   # noc moves land instantly
 
 
 @given(fleets())
