@@ -263,7 +263,9 @@ def cluster_hierarchy_sweep(cfg, params, rt, decode, *, capacity: int,
 
 
 def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
-                seed: int = 0, out_path: str = OUT) -> Dict:
+                seed: int = 0, out_path: str = OUT,
+                scale_groups: int = 100,
+                scale_requests: int = 100_000) -> Dict:
     import jax
 
     from repro.configs import get_config
@@ -345,6 +347,24 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
         cfg, params, rt, decode, capacity=capacity,
         horizon=horizon, seed=seed)
 
+    jax.clear_caches()
+    print(f"\n== fleet_scale sweep ({scale_groups} groups x "
+          f"{scale_requests:,} requests, vec engine) ==")
+    try:                                    # package vs direct execution
+        from benchmarks.fleet_scale_bench import (fleet_scale_sweep,
+                                                  suggest_split_microbench,
+                                                  write_timing_sidecar)
+    except ImportError:
+        from fleet_scale_bench import (fleet_scale_sweep,
+                                       suggest_split_microbench,
+                                       write_timing_sidecar)
+    out["fleet_scale"] = fleet_scale_sweep(
+        cfg, params, rt, groups=scale_groups, capacity=capacity,
+        n_requests=scale_requests, seed=seed, decode=decode)
+    out["fleet_scale"]["suggest_split_microbench"] = \
+        suggest_split_microbench()
+    write_timing_sidecar(out["fleet_scale"])
+
     dyn, fus = out["amoeba_dynamic"], out["static_fused"]
     thr = pol["threshold"]
     learned = {n: pol[n] for n in ("predictor", "online") if n in pol}
@@ -400,6 +420,11 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
           f"{hv['hier_interchip_stall_ticks']} ticks, "
           f"wins: {hv['hierarchical_beats_flat']}; zero-bw veto holds: "
           f"{hv['zero_bw_vetoes_crossings_intra_flows']}")
+    sv = out["fleet_scale"]["validation"]
+    print(f"vec engine at scale: {sv['vec_speedup_ticks_per_sec']:,}x "
+          f"ticks/sec vs object ({sv['vec_ticks_per_sec']:,} vs "
+          f"{sv['object_ticks_per_sec']}), "
+          f"vec sweep wall {sv['vec_total_wall_s']}s")
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {os.path.abspath(out_path)}")
@@ -419,7 +444,10 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: small fleet, short trace")
     args = ap.parse_args()
+    scale_groups, scale_requests = 100, 100_000
     if args.quick:
         args.groups, args.capacity, args.horizon = 2, 4, 40
+        scale_groups, scale_requests = 12, 5_000
     fleet_bench(groups=args.groups, capacity=args.capacity,
-                horizon=args.horizon, seed=args.seed, out_path=args.out)
+                horizon=args.horizon, seed=args.seed, out_path=args.out,
+                scale_groups=scale_groups, scale_requests=scale_requests)

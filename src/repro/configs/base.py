@@ -366,6 +366,11 @@ class FleetConfig:
     # round_robin | least_loaded | length_aware | sticky
     router: str = "least_loaded"
     mode: str = "dynamic"           # dynamic | fused | split
+    # tick engine: "object" decodes real tokens through the jitted model
+    # (per-part jax calls); "vec" is the struct-of-arrays core
+    # (repro.fleet.vec) — same control plane, same summary stats, no
+    # model, orders of magnitude faster for scheduling-only sweeps
+    engine: str = "object"
     long_threshold: int = 24        # length_aware: predicted-long cutoff
     telemetry_window: int = 256     # rolling-stat window, wall ticks
     # chip-level FleetController: re-evaluate the fleet's split mix every

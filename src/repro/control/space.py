@@ -107,6 +107,46 @@ def _enumerate_compositions(capacity: int, max_parts: int
     return tuple(out)
 
 
+@functools.lru_cache(maxsize=65536)
+def _partition_counts(B: int, topo: Topology) -> Tuple[int, ...]:
+    """Requests-per-part for ``B`` requests on ``topo``.
+
+    Pure function of the batch size and the topology — the slice sizes
+    :meth:`ConfigSpace.partition` cuts its policy ordering into
+    (largest-remainder quotas plus the overshoot / min-one repairs),
+    factored out and cached so candidate scoring never recomputes them.
+    Mirrors ``partition()`` exactly, including its degenerate path
+    (one part or fewer than two requests: everything in part 0).
+    """
+    k = len(topo)
+    if k <= 1 or B < 2:
+        return (B,) + (0,) * max(k - 1, 0)
+    C = sum(topo)
+    quota = [B * s / C for s in topo]
+    counts = [int(q) for q in quota]
+    extras = B - sum(counts)
+    by_frac = sorted(range(k), key=lambda i: (quota[i] - counts[i], i),
+                     reverse=True)
+    for i in by_frac[:extras]:
+        counts[i] += 1
+    if B <= C:                          # repair any budget overshoot
+        for i in range(k):
+            while counts[i] > topo[i]:
+                j = min((m for m in range(k) if counts[m] < topo[m]),
+                        key=lambda m: (abs(m - i), m))
+                counts[j] += 1
+                counts[i] -= 1
+    if B >= k:
+        # every part hosts at least one request: an empty part would
+        # price its slots at zero and fake a gain by stranding them
+        for i in range(k):
+            while counts[i] == 0:
+                j = max(range(k), key=lambda m: (counts[m], -m))
+                counts[j] -= 1
+                counts[i] += 1
+    return tuple(counts)
+
+
 @dataclass(frozen=True)
 class ConfigSpace:
     """Legal topologies for one capacity-``C`` group and their transitions.
@@ -295,6 +335,46 @@ class ConfigSpace:
         return float(sum(s * r[p].max()
                          for s, p in zip(topo, parts) if len(p)))
 
+    def _policy_order(self, r: np.ndarray, policy: str) -> np.ndarray:
+        """``r`` permuted into the policy's full (fast + slow) ordering.
+
+        The key to fast candidate scoring: :meth:`partition`'s ordering
+        is a pure function of ``remaining`` and the policy — it never
+        depends on the candidate topology — so the sort happens *once*
+        and every candidate is priced against the same ordered array.
+        """
+        fast, slow = POLICIES[policy](list(range(r.size)), r)
+        return r[np.asarray(fast + slow, np.int64)]
+
+    def _ordered_cost(self, r_ord: np.ndarray, t: TopologyLike) -> float:
+        """:meth:`slot_cost` from a pre-ordered ``remaining`` array.
+
+        Replaces the O(parts x capacity) per-candidate scan (re-sort,
+        re-partition, fancy-index every part) with cached per-part
+        counts (:func:`_partition_counts`) and one ``maximum.reduceat``
+        over the contiguous chunks.  Bit-identical to ``slot_cost``:
+        the chunks are the same members in the same order, ``max`` /
+        ``reduceat`` pick an element (no arithmetic), and the ``sum``
+        accumulates the same np.float64 terms in the same order.
+        """
+        if r_ord.size == 0 or r_ord.max() <= 0:
+            return 0.0
+        topo = self.as_topology(t)
+        counts = _partition_counts(r_ord.size, topo)
+        if 0 not in counts:                 # the common case: B >= parts
+            starts, pos = [], 0
+            for c in counts:
+                starts.append(pos)
+                pos += c
+            maxes = np.maximum.reduceat(r_ord, starts)
+            return float(sum(s * m for s, m in zip(topo, maxes)))
+        chunks, pos = [], 0
+        for s, c in zip(topo, counts):
+            if c:
+                chunks.append(s * r_ord[pos:pos + c].max())
+            pos += c
+        return float(sum(chunks))
+
     def gain(self, remaining: Sequence[float], t: TopologyLike,
              policy: str = "warp_regroup") -> float:
         """Relative slot-waste saving of ``t`` vs fully fused, in [0, 1).
@@ -408,7 +488,8 @@ class ConfigSpace:
         cands = [t for t in cands if len(t) <= r.size] or None
         if cands is None:
             return None                     # every cut would strand a part
-        return min(cands, key=lambda t: (self.slot_cost(r, t, policy),
+        r_ord = self._policy_order(r, policy)
+        return min(cands, key=lambda t: (self._ordered_cost(r_ord, t),
                                          len(t), t))
 
     def suggest_improve(self, cur: TopologyLike,
@@ -439,10 +520,11 @@ class ConfigSpace:
                  and len(t) <= r.size]
         if not cands:
             return None
-        best = min(cands, key=lambda t: (self.slot_cost(r, t, policy),
+        r_ord = self._policy_order(r, policy)
+        best = min(cands, key=lambda t: (self._ordered_cost(r_ord, t),
                                          len(t), t))
-        if self.slot_cost(r, best, policy) \
-                < self.slot_cost(r, c, policy) - 1e-12:
+        if self._ordered_cost(r_ord, best) \
+                < self._ordered_cost(r_ord, c) - 1e-12:
             return best
         return None
 
@@ -465,7 +547,8 @@ class ConfigSpace:
         if r is None or r.size < 2 or r.max() <= 0:
             lad = tuple(sum(c[i:i + 2]) for i in range(0, len(c), 2))
             return lad if lad in cands else cands[0]
-        return min(cands, key=lambda t: (self.slot_cost(r, t, policy),
+        r_ord = self._policy_order(r, policy)
+        return min(cands, key=lambda t: (self._ordered_cost(r_ord, t),
                                          len(t), t))
 
     # -- transitions -----------------------------------------------------------
@@ -510,31 +593,8 @@ class ConfigSpace:
         r = np.asarray(remaining, np.float64)
         fast, slow = POLICIES[policy](idx, r)
         order = fast + slow                 # full policy ordering
-        B, C = len(idx), sum(topo)
-        quota = [B * s / C for s in topo]
-        counts = [int(q) for q in quota]
-        extras = B - sum(counts)
-        by_frac = sorted(range(k), key=lambda i: (quota[i] - counts[i], i),
-                         reverse=True)
-        for i in by_frac[:extras]:
-            counts[i] += 1
-        if B <= C:                          # repair any budget overshoot
-            for i in range(k):
-                while counts[i] > topo[i]:
-                    j = min((m for m in range(k) if counts[m] < topo[m]),
-                            key=lambda m: (abs(m - i), m))
-                    counts[j] += 1
-                    counts[i] -= 1
-        if B >= k:
-            # every part hosts at least one request: an empty part would
-            # price its slots at zero and fake a gain by stranding them
-            for i in range(k):
-                while counts[i] == 0:
-                    j = max(range(k), key=lambda m: (counts[m], -m))
-                    counts[j] -= 1
-                    counts[i] += 1
         out, pos = [], 0
-        for c in counts:
+        for c in _partition_counts(len(idx), topo):
             out.append(order[pos:pos + c])
             pos += c
         return out

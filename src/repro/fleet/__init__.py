@@ -16,10 +16,12 @@ from repro.fleet.traffic import (TenantProfile, bursty_longtail_trace,
                                  multichip_imbalanced_trace,
                                  poisson_trace, skewed_longtail_trace,
                                  uniform_trace)
+from repro.fleet.vec import TrackedQueue, VecGroup, VecState
 
 __all__ = [
     "FleetEngine", "ROUTERS", "DEFAULT_MODES", "replay_modes",
     "replay_policies", "FleetTelemetry", "RollingWindow",
+    "VecState", "VecGroup", "TrackedQueue",
     "KVTransferCost", "Migration", "MigrationPlanner",
     "TenantProfile", "make_trace", "poisson_trace",
     "bursty_longtail_trace", "skewed_longtail_trace",

@@ -50,6 +50,7 @@ SMs share one instruction front-end.
 from __future__ import annotations
 
 import heapq
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import FleetConfig, ModelConfig
@@ -58,6 +59,7 @@ from repro.control.policies import ReconfigPolicy
 from repro.core.predictor import LogisticModel
 from repro.fleet.migrate import MigrationPlanner, fit_part
 from repro.fleet.telemetry import FleetTelemetry
+from repro.fleet.vec import VecGroup, VecState
 from repro.models import transformer as T
 from repro.serve.engine import (IDLE, TICKED, ReconfigurableGroup, Request,
                                 make_decode_fn)
@@ -210,13 +212,21 @@ class FleetEngine:
         if fleet.router not in ROUTERS:
             raise ValueError(f"unknown router {fleet.router!r}; "
                              f"have {sorted(ROUTERS)}")
+        if fleet.engine not in ("object", "vec"):
+            raise ValueError(f"unknown engine {fleet.engine!r}; "
+                             f"have ('object', 'vec')")
         self.cfg = model_cfg
         self.params = params
         self.rt = rt
         self.fleet = fleet
         # one compiled decode shared by every group (per batch shape);
-        # callers comparing several fleets can pass one in to share it wider
-        self._decode = decode_fn or make_decode_fn(model_cfg, rt)
+        # callers comparing several fleets can pass one in to share it
+        # wider.  The vec engine never decodes tokens, so it skips the
+        # jit entirely (and tolerates params=None).
+        self._vec = VecState(fleet.num_groups, fleet.capacity) \
+            if fleet.engine == "vec" else None
+        self._decode = decode_fn if self._vec is not None \
+            else (decode_fn or make_decode_fn(model_cfg, rt))
         # chip-wide control plane: one replay buffer and one policy object
         # shared by every group, so online learning pools all samples
         self.telemetry = FleetTelemetry(
@@ -241,13 +251,19 @@ class FleetEngine:
         # only an online policy consumes the replay buffer; wiring it to
         # every group would pay the per-tick labeling cost for nothing
         grp_replay = getattr(self.policy, "replay", None)
-        self.groups = [
-            ReconfigurableGroup(
-                model_cfg, params, rt=rt, amoeba=fleet.amoeba,
-                capacity=fleet.capacity, window=fleet.window,
-                mode=fleet.mode, gid=i, decode_fn=self._decode,
-                policy=self.policy, replay=grp_replay)
-            for i in range(fleet.num_groups)]
+        grp_kw = dict(rt=rt, amoeba=fleet.amoeba, capacity=fleet.capacity,
+                      window=fleet.window, mode=fleet.mode,
+                      policy=self.policy, replay=grp_replay)
+        if self._vec is not None:
+            self.groups = [
+                VecGroup(model_cfg, params, gid=i, vec_state=self._vec,
+                         **grp_kw)
+                for i in range(fleet.num_groups)]
+        else:
+            self.groups = [
+                ReconfigurableGroup(model_cfg, params, gid=i,
+                                    decode_fn=self._decode, **grp_kw)
+                for i in range(fleet.num_groups)]
         self._router = ROUTERS[fleet.router]
         self._router_state: Dict = {"long_threshold": fleet.long_threshold}
         if fleet.quarantine_group is not None and not (
@@ -292,12 +308,21 @@ class FleetEngine:
         self._seq = 0
         self._last_delivered: Tuple[int, int] = (-1, -1)
         self.wall = 0
+        self._run_seconds = 0.0        # cumulative wall-clock inside run()
 
     # -- admission -------------------------------------------------------------
 
     def submit(self, requests: Sequence[Request]) -> None:
-        """Queue requests for delivery at their ``arrival`` tick."""
+        """Queue requests for delivery at their ``arrival`` tick.
+
+        Negative arrivals are normalized here, at the submission
+        boundary, so delivery never mutates a caller's trace objects —
+        a trace can be replayed across engines without aliasing
+        surprises.
+        """
         for r in requests:
+            if r.arrival < 0:
+                r.arrival = 0
             self.requests.append(r)
             self._seq += 1
             heapq.heappush(self._pending, (r.arrival, self._seq, r))
@@ -313,7 +338,6 @@ class FleetEngine:
                 assert seq > self._last_delivered[1], \
                     (arrival, seq, self._last_delivered)
             self._last_delivered = (arrival, seq)
-            r.arrival = max(r.arrival, 0)
             dest = self._router(r, self.groups, self._router_state)
             gi, pi = dest if isinstance(dest, tuple) else (dest, None)
             self.groups[gi].submit([r], now=self.wall, part=pi)
@@ -330,21 +354,44 @@ class FleetEngine:
 
     # -- main loop ----------------------------------------------------------------
 
+    def _step_groups(self, dynamic: bool) -> List[str]:
+        """Advance every group one tick; vec mode batches the decode.
+
+        In vec mode each group's ``step()`` only runs control flow
+        (admission, controller, stall bookkeeping) and *marks* its
+        decoding parts; the single ``decode_tick`` then applies every
+        mark with one masked array pass.  Deferring is equivalent to the
+        object engine's in-loop decodes because a decode only touches
+        its own group's rows and nothing reads another group's
+        post-decode state within the same tick.
+        """
+        statuses = [g.step(dynamic=dynamic, now=self.wall)
+                    for g in self.groups]
+        if self._vec is not None:
+            self._vec.decode_tick(self.wall, self.groups)
+        return statuses
+
     def run(self, dynamic: bool = True,
             max_ticks: int = 1_000_000) -> Dict:
         """Drive the fleet until the trace is fully drained (or max_ticks)."""
+        t0 = time.perf_counter()
         while self.wall < max_ticks:
             self._deliver()
             if self.controller is not None and dynamic \
                     and self.fleet.mode == "dynamic":
+                if self._vec is not None \
+                        and self.wall % self.controller.every == 0:
+                    # rebalance ticks read Request.generated lengths
+                    # (KV-transfer pricing, long-fraction mix); make the
+                    # lazily-materialized lists truthful first
+                    self._vec.sync_generated()
                 self.controller.rebalance(self.wall, self.groups)
                 plans = self.controller.take_plans()
                 if plans:
                     # execute between ticks: steals re-queue, live
                     # migrations splice KV rows before anyone decodes
                     self.planner.execute(plans, self.groups, now=self.wall)
-            statuses = [g.step(dynamic=dynamic, now=self.wall)
-                        for g in self.groups]
+            statuses = self._step_groups(dynamic)
             ticked = sum(s == TICKED for s in statuses)
             if all(s == IDLE for s in statuses):
                 nxt_evt = self._next_event()
@@ -362,12 +409,22 @@ class FleetEngine:
                 continue
             self.telemetry.on_tick(self.wall, self.groups, ticked)
             self.wall += 1
+        if self._vec is not None:
+            self._vec.sync_generated()
         for g in self.groups:
             g.finalize()
-        return self.telemetry.summary(self.groups, self.requests,
-                                      policy=self.policy,
-                                      fleet_controller=self.controller,
-                                      router_state=self._router_state)
+        summary = self.telemetry.summary(self.groups, self.requests,
+                                         policy=self.policy,
+                                         fleet_controller=self.controller,
+                                         router_state=self._router_state)
+        # perf trajectory: every summary (and thus every BENCH entry)
+        # carries measured wall seconds and simulated ticks per second;
+        # cumulative across run() calls on the same engine
+        self._run_seconds += time.perf_counter() - t0
+        summary["wall_s"] = round(self._run_seconds, 4)
+        summary["ticks_per_sec"] = round(
+            summary["wall_ticks"] / max(self._run_seconds, 1e-9), 1)
+        return summary
 
     # -- aggregates -------------------------------------------------------------
 

@@ -235,9 +235,9 @@ class ReconfigurableGroup:
             self.queue.append(r)
         self._arrivals.record(now, len(requests))
 
-    def _prefill_wave(self, n_slots: int, now: int,
-                      part_idx: Optional[int] = None) -> Optional[_Group]:
-        """Admit up to n_slots queued requests: batch prefill per length.
+    def _admission_scan(self, n_slots: int,
+                        part_idx: Optional[int] = None) -> List[Request]:
+        """Pop up to ``n_slots`` admissible requests off the queue.
 
         Part affinity is a *soft* preference: requests affine to a
         different live part are passed over first, but an otherwise idle
@@ -245,6 +245,8 @@ class ReconfigurableGroup:
         conservation — affinity biases placement, never availability).
         The scan is bounded so a deep backlog of foreign-affine
         requests costs O(capacity) churn per part-tick, not O(queue).
+        Shared by the jax prefill path and the vectorized engine, so
+        both admit byte-identical waves.
         """
         wave: List[Request] = []
         deferred: List[Request] = []
@@ -267,6 +269,12 @@ class ReconfigurableGroup:
             wave.append(r)
         for r in reversed(deferred):
             self.queue.appendleft(r)
+        return wave
+
+    def _prefill_wave(self, n_slots: int, now: int,
+                      part_idx: Optional[int] = None) -> Optional[_Group]:
+        """Admit up to n_slots queued requests: batch prefill per length."""
+        wave = self._admission_scan(n_slots, part_idx)
         if not wave:
             return None
         by_len: Dict[int, List[Request]] = collections.defaultdict(list)
@@ -292,7 +300,8 @@ class ReconfigurableGroup:
 
     # -- decode ----------------------------------------------------------------
 
-    def _tick_group(self, g: _Group, slots: int, now: int) -> None:
+    def _tick_group(self, g: _Group, slots: int, now: int,
+                    part_idx: int = 0) -> None:
         """One decode step for every live request in the group."""
         live = [i for i, r in enumerate(g.requests) if not r.done]
         if not live:
@@ -320,6 +329,14 @@ class ReconfigurableGroup:
         for r in (g.requests if g else []):
             self._credit(r)
 
+    def _part_done(self, g) -> bool:
+        """Is this part drained (empty or all members done)?
+
+        Overridable data-plane hook: the vectorized engine answers from
+        its arrays instead of per-request ``generated`` lists.
+        """
+        return _group_done(g)
+
     # -- topology --------------------------------------------------------------
 
     def _reconfigure(self, target: Topology) -> None:
@@ -334,13 +351,7 @@ class ReconfigurableGroup:
         """
         target = self.space.as_topology(target)
         live = [p for p in self._parts if p is not None]
-        if len(live) == 1:
-            merged = live[0]
-        else:
-            merged = _Group(
-                sum((p.requests for p in live), []),
-                su.concat([p.state for p in live]),
-                jnp.concatenate([p.last for p in live], axis=0))
+        merged = self._merge_parts(live)
         if len(target) > len(self._parts):
             self.stats.splits += 1
         elif len(target) < len(self._parts):
@@ -356,20 +367,29 @@ class ReconfigurableGroup:
             self._slots = [self.capacity]
             self._stall = [pending_stall]
             return
-
-        def mk(ids: List[int]) -> Optional[_Group]:
-            if not ids:
-                return None
-            return _Group([merged.requests[i] for i in ids],
-                          su.take(merged.state, ids),
-                          jnp.take(merged.last, jnp.asarray(ids), axis=0))
-
         parts_idx = self.space.partition(
             list(range(len(merged.requests))), merged.remaining, target,
             self.acfg.regroup_policy)
-        self._parts = [mk(ids) for ids in parts_idx]
+        self._parts = [self._make_part(merged, ids) for ids in parts_idx]
         self._slots = list(target)
         self._stall = [pending_stall] * len(self._slots)
+
+    def _merge_parts(self, live: List[_Group]) -> _Group:
+        """Concatenate live parts (in part order) into one batch."""
+        if len(live) == 1:
+            return live[0]
+        return _Group(
+            sum((p.requests for p in live), []),
+            su.concat([p.state for p in live]),
+            jnp.concatenate([p.last for p in live], axis=0))
+
+    def _make_part(self, merged: _Group, ids: List[int]) -> Optional[_Group]:
+        """Slice one re-partitioned part out of the merged batch."""
+        if not ids:
+            return None
+        return _Group([merged.requests[i] for i in ids],
+                      su.take(merged.state, ids),
+                      jnp.take(merged.last, jnp.asarray(ids), axis=0))
 
     # -- introspection (used by the fleet router and telemetry) ----------------
 
@@ -490,7 +510,7 @@ class ReconfigurableGroup:
         for i, p in enumerate(self._parts):
             if self._stall[i] > 0:
                 continue
-            if _group_done(p):
+            if self._part_done(p):
                 self._retire(p)
                 self._parts[i] = self._prefill_wave(self._slots[i], now,
                                                     part_idx=i)
@@ -521,7 +541,7 @@ class ReconfigurableGroup:
                     self.stats.stall_ticks += 1
                 continue
             if p is not None:
-                self._tick_group(p, self._slots[i], now)
+                self._tick_group(p, self._slots[i], now, part_idx=i)
         self.stats.ticks += 1
         return TICKED
 

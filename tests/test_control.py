@@ -222,3 +222,57 @@ def test_group_controller_logs_realized_win_labels():
 def test_serve_predictor_learns_the_corpus():
     model, info = train_serve_predictor(n_samples=512, steps=400, seed=0)
     assert info["train_accuracy"] > 0.85
+
+
+# -- fast suggest_* (shared-ordering evaluator) --------------------------------
+
+def _brute_best(sp, cands, r, policy):
+    """The pre-optimization argmin: full slot_cost per candidate."""
+    return min(cands, key=lambda t: (sp.slot_cost(r, t, policy), len(t), t))
+
+
+def test_fast_suggests_match_brute_force():
+    """suggest_split/improve/fuse must pick exactly the brute-force
+    argmin over the public slot_cost — the fast path is an evaluation
+    strategy, never a behavior change."""
+    rng = np.random.default_rng(0)
+    for _ in range(120):
+        cap = int(rng.integers(2, 13))
+        sp = ConfigSpace(capacity=cap, max_ways=int(rng.integers(2, 7)),
+                         hetero=bool(rng.integers(0, 2)))
+        comps = sp.compositions()
+        cur = comps[rng.integers(0, len(comps))]
+        r = rng.integers(1, 40, int(rng.integers(2, cap + 2))
+                         ).astype(np.float64)
+        policy = ("warp_regroup", "direct_split")[rng.integers(0, 2)]
+
+        cands = [t for t in sp.split_moves(cur) if len(t) <= r.size]
+        if cands:
+            assert sp.suggest_split(cur, r, policy) == \
+                _brute_best(sp, cands, r, policy)
+        cands = sp.fuse_moves(cur)
+        if cands:
+            assert sp.suggest_fuse(cur, r, policy) == \
+                _brute_best(sp, cands, r, policy)
+        cands = [t for t in sp.split_moves(cur) + sp.resize_moves(cur)
+                 if len(t) <= r.size]
+        if cands:
+            best = _brute_best(sp, cands, r, policy)
+            want = best if sp.slot_cost(r, best, policy) \
+                < sp.slot_cost(r, cur, policy) - 1e-12 else None
+            assert sp.suggest_improve(cur, r, policy) == want
+
+
+def test_ordered_cost_bit_identical_to_slot_cost():
+    rng = np.random.default_rng(1)
+    for _ in range(200):
+        cap = int(rng.integers(1, 17))
+        sp = ConfigSpace(capacity=cap, max_ways=int(rng.integers(1, 9)),
+                         hetero=True)
+        comps = sp.compositions()
+        t = comps[rng.integers(0, len(comps))]
+        r = rng.integers(0, 50, int(rng.integers(0, cap + 3))
+                         ).astype(np.float64)
+        for policy in ("warp_regroup", "direct_split"):
+            r_ord = sp._policy_order(r, policy) if r.size else r
+            assert sp._ordered_cost(r_ord, t) == sp.slot_cost(r, t, policy)
