@@ -110,7 +110,8 @@ def composition_sweep(cfg, params, rt, decode, *, groups: int,
 
 
 def work_stealing_sweep(cfg, params, rt, decode, *, groups: int,
-                        capacity: int, horizon: int, seed: int) -> Dict:
+                        capacity: int, horizon: int, seed: int,
+                        trace_out: str = None) -> Dict:
     """Cross-group work stealing on a shard-skewed trace, on vs off.
 
     Both runs use sticky (shard-affinity) routing on the imbalanced
@@ -130,14 +131,23 @@ def work_stealing_sweep(cfg, params, rt, decode, *, groups: int,
     for label, mig in variants.items():
         trace = imbalanced_trace(horizon=horizon, vocab_size=cfg.vocab_size,
                                  seed=seed, shards=groups)
+        # the stealing run carries the full event stream when a trace
+        # path was requested (repro.obs) — steals/reconfigs/decisions
+        # land in the exported JSONL the CI round-trip check consumes
+        obs_mode = "full" if trace_out and label == "stealing" else "off"
         eng = FleetEngine(cfg, params, rt=rt, decode_fn=decode,
                           fleet=FleetConfig(
                               num_groups=groups, capacity=capacity,
                               router="sticky", mode="dynamic",
                               rebalance_every=4, migrate=mig,
-                              amoeba=amoeba))
+                              amoeba=amoeba, obs=obs_mode))
         eng.submit(trace)
         s = eng.run()
+        if obs_mode == "full":
+            from repro.obs import write_jsonl
+            n_ev = write_jsonl(trace_out, eng.obs.events(),
+                               meta=eng.obs.meta)
+            print(f"wrote {n_ev} events to {os.path.abspath(trace_out)}")
         if s["completed"] != len(trace):
             raise RuntimeError(f"{label}: completed {s['completed']} of "
                                f"{len(trace)} requests")
@@ -265,7 +275,8 @@ def cluster_hierarchy_sweep(cfg, params, rt, decode, *, capacity: int,
 def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
                 seed: int = 0, out_path: str = OUT,
                 scale_groups: int = 100,
-                scale_requests: int = 100_000) -> Dict:
+                scale_requests: int = 100_000,
+                trace_out: str = None) -> Dict:
     import jax
 
     from repro.configs import get_config
@@ -339,7 +350,8 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
     print("\n== work-stealing sweep (imbalanced trace, sticky routing) ==")
     out["work_stealing"] = work_stealing_sweep(
         cfg, params, rt, decode, groups=groups,
-        capacity=capacity, horizon=horizon, seed=seed)
+        capacity=capacity, horizon=horizon, seed=seed,
+        trace_out=trace_out)
 
     jax.clear_caches()
     print("\n== cluster hierarchy sweep (2D mesh, tiered links) ==")
@@ -352,10 +364,12 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
           f"{scale_requests:,} requests, vec engine) ==")
     try:                                    # package vs direct execution
         from benchmarks.fleet_scale_bench import (fleet_scale_sweep,
+                                                  obs_overhead_sweep,
                                                   suggest_split_microbench,
                                                   write_timing_sidecar)
     except ImportError:
         from fleet_scale_bench import (fleet_scale_sweep,
+                                       obs_overhead_sweep,
                                        suggest_split_microbench,
                                        write_timing_sidecar)
     out["fleet_scale"] = fleet_scale_sweep(
@@ -364,6 +378,11 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
     out["fleet_scale"]["suggest_split_microbench"] = \
         suggest_split_microbench()
     write_timing_sidecar(out["fleet_scale"])
+
+    print("\n== obs overhead microbench (event stream off/summary/full) ==")
+    out["obs_overhead"] = obs_overhead_sweep(
+        cfg, rt, groups=min(scale_groups, 20), capacity=capacity,
+        n_requests=min(scale_requests, 20_000), seed=seed)
 
     dyn, fus = out["amoeba_dynamic"], out["static_fused"]
     thr = pol["threshold"]
@@ -425,6 +444,11 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
           f"ticks/sec vs object ({sv['vec_ticks_per_sec']:,} vs "
           f"{sv['object_ticks_per_sec']}), "
           f"vec sweep wall {sv['vec_total_wall_s']}s")
+    ov = out["obs_overhead"]
+    print(f"obs overhead: off {ov['off_overhead_frac']:+.2%} "
+          f"(<=2%: {ov['validation']['off_within_2pct']}), "
+          f"full {ov['full_overhead_frac']:+.2%} "
+          f"(<=15%: {ov['validation']['full_within_15pct']})")
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {os.path.abspath(out_path)}")
@@ -441,6 +465,10 @@ if __name__ == "__main__":
     ap.add_argument("--horizon", type=int, default=120)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=OUT)
+    ap.add_argument("--trace-out",
+                    default=os.path.join(ROOT, "BENCH_fleet_trace.jsonl"),
+                    help="JSONL event trace from the work_stealing sweep "
+                         "(empty string disables)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: small fleet, short trace")
     args = ap.parse_args()
@@ -450,4 +478,5 @@ if __name__ == "__main__":
         scale_groups, scale_requests = 12, 5_000
     fleet_bench(groups=args.groups, capacity=args.capacity,
                 horizon=args.horizon, seed=args.seed, out_path=args.out,
-                scale_groups=scale_groups, scale_requests=scale_requests)
+                scale_groups=scale_groups, scale_requests=scale_requests,
+                trace_out=args.trace_out or None)

@@ -153,6 +153,66 @@ def fleet_scale_sweep(cfg, params, rt, *, groups: int = 100,
     return out
 
 
+def obs_overhead_sweep(cfg, rt, *, groups: int = 20, capacity: int = 8,
+                       n_requests: int = 20_000, seed: int = 0,
+                       repeats: int = 3) -> Dict:
+    """Ticks-per-second cost of the obs event stream on the vec engine.
+
+    Three modes over the identical fleet_scale dynamic config, best of
+    ``repeats`` runs each to suppress scheduler noise:
+
+    * ``baseline`` — ``obs="off"``, the reference;
+    * ``off`` — ``obs="off"`` again: same code path, so the measured
+      "overhead" is the noise floor the ≤ 2% acceptance bound must
+      absorb (off-mode adds only ``log.enabled`` attribute checks);
+    * ``full`` — ring buffer + per-tick metrics sampling, bounded
+      against ``off`` at ≤ 15%.
+    """
+    from repro.configs.base import AmoebaConfig, FleetConfig
+    from repro.fleet import FleetEngine
+
+    amoeba = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                          min_phase_steps=2)
+    mean_len = 0.35 * 4 + 0.3 * 8 + 0.2 * 16 + 0.1 * 32 + 0.05 * 48
+    horizon = max(int(n_requests * mean_len / (groups * capacity * 0.7)), 1)
+
+    def best_tps(obs_mode: str) -> float:
+        tps = []
+        for _ in range(repeats):
+            eng = FleetEngine(cfg, None, rt=rt, fleet=FleetConfig(
+                num_groups=groups, capacity=capacity, window=64,
+                amoeba=amoeba, engine="vec", mode="dynamic",
+                router="least_loaded", obs=obs_mode))
+            eng.submit(scale_trace(n_requests, groups, horizon, seed))
+            s = eng.run()
+            if s["completed"] != n_requests:
+                raise RuntimeError(
+                    f"obs={obs_mode}: completed {s['completed']} of "
+                    f"{n_requests}")
+            tps.append(s["ticks_per_sec"])
+        return max(tps)
+
+    baseline = best_tps("off")
+    off = best_tps("off")
+    full = best_tps("full")
+    out = {
+        "config": {"groups": groups, "capacity": capacity,
+                   "n_requests": n_requests, "horizon": horizon,
+                   "seed": seed, "repeats": repeats},
+        "ticks_per_sec": {"baseline": baseline, "off": off, "full": full},
+        "off_overhead_frac": round(1.0 - off / max(baseline, 1e-9), 4),
+        "full_overhead_frac": round(1.0 - full / max(off, 1e-9), 4),
+    }
+    out["validation"] = {
+        "off_within_2pct": out["off_overhead_frac"] <= 0.02,
+        "full_within_15pct": out["full_overhead_frac"] <= 0.15,
+    }
+    print(f"obs overhead: baseline={baseline:.1f} off={off:.1f} "
+          f"full={full:.1f} tps -> off {out['off_overhead_frac']:+.2%}, "
+          f"full {out['full_overhead_frac']:+.2%}")
+    return out
+
+
 # -- suggest_split micro-benchmark ---------------------------------------------
 
 def _legacy_counts(B, topo):

@@ -1,0 +1,77 @@
+"""CLI over a JSONL event trace: timeline, attribution, mispredictions.
+
+Usage::
+
+    # full text report: timeline, decisions-preceding-reconfigs table,
+    # top-K misprediction table
+    python benchmarks/trace_report.py TRACE.jsonl
+
+    # assert the JSONL round-trips exactly (CI uses this)
+    python benchmarks/trace_report.py TRACE.jsonl --check
+
+    # convert to Chrome trace-event JSON (open in ui.perfetto.dev)
+    python benchmarks/trace_report.py TRACE.jsonl --chrome trace.json
+
+Produce a trace by running any fleet engine with
+``FleetConfig(obs="full")`` and exporting::
+
+    from repro.obs import write_jsonl
+    write_jsonl("TRACE.jsonl", eng.obs.events(), meta=eng.obs.meta)
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.events import jsonable                      # noqa: E402
+from repro.obs.export import chrome_trace, read_jsonl      # noqa: E402
+from repro.obs.report import render_report                 # noqa: E402
+
+
+def check_roundtrip(path: str, meta, events) -> None:
+    """Assert the file is the fixed point of parse -> re-serialize."""
+    with open(path) as f:
+        original = [line.strip() for line in f if line.strip()]
+    rebuilt = [json.dumps({"kind": "_meta", **meta}, sort_keys=True)]
+    rebuilt += [json.dumps(jsonable(e), sort_keys=True) for e in events]
+    assert len(original) == len(rebuilt), \
+        f"line count changed: {len(original)} -> {len(rebuilt)}"
+    for i, (a, b) in enumerate(zip(original, rebuilt)):
+        assert json.loads(a) == json.loads(b), \
+            f"line {i} did not round-trip:\n  {a}\n  {b}"
+    print(f"round-trip ok: {len(events)} events")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL trace (repro.obs.write_jsonl)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the JSONL round-trips exactly and exit")
+    ap.add_argument("--chrome", metavar="OUT",
+                    help="write Chrome trace-event JSON to OUT")
+    ap.add_argument("--timeline", type=int, default=40,
+                    help="max timeline lines (default 40)")
+    ap.add_argument("--top-k", type=int, default=10,
+                    help="misprediction table size (default 10)")
+    args = ap.parse_args(argv)
+
+    meta, events = read_jsonl(args.trace)
+    if args.check:
+        check_roundtrip(args.trace, meta, events)
+        return 0
+    if args.chrome:
+        trace = chrome_trace(events, meta)
+        with open(args.chrome, "w") as f:
+            json.dump(trace, f)
+        print(f"wrote {len(trace['traceEvents'])} trace events "
+              f"to {args.chrome} (open in ui.perfetto.dev)")
+        return 0
+    print(render_report(events, meta, timeline_limit=args.timeline,
+                        top_k=args.top_k))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

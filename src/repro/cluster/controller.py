@@ -59,6 +59,7 @@ from repro.cluster.mesh import TIERS, TOKEN_BYTES, ClusterMesh, \
 from repro.cluster.regions import RegionManager
 from repro.control.controller import FleetController
 from repro.control.features import FeatureVector
+from repro.obs.events import NULL_LOG
 from repro.fleet.migrate import Addr, KVTransferCost, Migration, \
     MigrationPlanner, STEAL, _GroupView
 from repro.serve.engine import Request
@@ -238,6 +239,12 @@ class ClusterPlanner(MigrationPlanner):
             self._flight_seq += 1
             self._in_flight.append(
                 (now + int(ticks), self._flight_seq, m.request, m.dst))
+            if self.obs.enabled:
+                self.obs.emit("steal", gid=m.dst[0], part=m.dst[1],
+                              tick=now, rid=m.request.rid,
+                              src=m.src, dst=m.dst, gain=float(m.gain),
+                              in_flight=True, arrive=now + int(ticks),
+                              tier=tier)
             done = 1
         if done:
             if tier == "noc":
@@ -375,6 +382,8 @@ class ClusterController:
         self._plans: List[Migration] = []
         self.chip_pressure: Dict[int, ChipPressure] = {}
         self._chip_done: Dict[int, Tuple[int, int]] = {}  # ci -> (tick, done)
+        # event stream (repro.obs); the cluster engine wires its log in
+        self.obs = NULL_LOG
 
     def _local_quarantine(self, ci: int) -> Optional[int]:
         q = self.quarantine
@@ -443,10 +452,26 @@ class ClusterController:
             long_fracs[ci] = p.long_frac
             issued += fc.rebalance(tick, cgroups)
         if self.regions is not None:
+            before = {ci: tuple(r.groups)
+                      for ci, r in self.regions.active.items()} \
+                if self.obs.enabled else {}
             # gather first would fight this tick's mix nudges; stepping
             # after lets the re-asserted deep hints win (last hint wins)
             issued += self.regions.step(tick, groups, long_fracs,
                                         quarantine=self.quarantine)
+            if self.obs.enabled:
+                after = {ci: tuple(r.groups)
+                         for ci, r in self.regions.active.items()}
+                for ci in sorted(set(before) | set(after)):
+                    b, a = before.get(ci), after.get(ci)
+                    if b == a:
+                        continue
+                    action = ("gather" if b is None
+                              else "release" if a is None else "resize")
+                    gids = a if a is not None else b
+                    self.obs.emit("region_grab", gid=gids[0], tick=tick,
+                                  chip=ci, action=action,
+                                  groups=list(gids))
             self.planner.set_regions(self.regions.region_groups())
         self._plans = self.planner.plan(
             tick, groups, reserved=self.reserved_parts(groups))

@@ -56,6 +56,12 @@ class ClusterEngine(FleetEngine):
         # the router's admission-spill pressure view rides the tiered
         # planner now
         self._router_state["planner"] = self.planner
+        # one event stream for the whole hierarchy: the tiered planner's
+        # steals/migrations and the region gathers land in the same log,
+        # and exporters get the mesh layout for chip-grouped rendering
+        self.planner.obs = self.obs
+        self.cluster.obs = self.obs
+        self.obs.meta["mesh"] = self.mesh.layout()
 
     def _deliver(self) -> None:
         self.planner.deliver_in_flight(self.wall, self.groups)

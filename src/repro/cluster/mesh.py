@@ -130,6 +130,24 @@ class ClusterMesh:
             return "link"
         return "net"
 
+    def layout(self) -> dict:
+        """JSON-able placement map for trace exporters (repro.obs).
+
+        Keys are strings so the dict survives a JSONL round-trip
+        unchanged — json object keys are always strings.
+        """
+        return {
+            "num_groups": self.num_groups,
+            "groups_per_chip": self.groups_per_chip,
+            "chips_per_node": self.chips_per_node,
+            "chip_of": {str(g): self.chip_of(g)
+                        for g in range(self.num_groups)},
+            "node_of_chip": {str(c): self.node_of(c)
+                             for c in range(self.num_chips)},
+            "coord": {str(g): list(self.coord(g))
+                      for g in range(self.num_groups)},
+        }
+
     def describe(self) -> str:
         """One line per chip — the example/demo layout dump."""
         lines = []

@@ -385,6 +385,10 @@ class FleetConfig:
     # the hierarchical layer above the fleet (repro.cluster): groups on
     # a 2D chip mesh with tiered transfer costs; None = flat fleet
     cluster: Optional[ClusterConfig] = None
+    # structured event tracing (repro.obs): "off" keeps summaries
+    # bit-identical, "summary" counts events, "full" retains the ring
+    # buffer + per-tick metrics for the exporters and decision audit
+    obs: str = "off"
 
     def replace(self, **kw) -> "FleetConfig":
         return dataclasses.replace(self, **kw)

@@ -31,6 +31,7 @@ import numpy as np
 from repro.control.features import FeatureVector, ReplayBuffer
 from repro.control.policies import Decision, ReconfigPolicy, ThresholdPolicy
 from repro.control.space import ConfigSpace, Topology, TopologyLike, n_parts
+from repro.obs.events import NULL_LOG, EventLog
 
 
 @dataclass
@@ -65,13 +66,17 @@ class GroupController:
                  dwell: int = 8,
                  replay: Optional[ReplayBuffer] = None,
                  label_margin: float = 0.02,
-                 regroup_policy: str = "warp_regroup"):
+                 regroup_policy: str = "warp_regroup",
+                 obs: Optional[EventLog] = None,
+                 gid: int = -1):
         self.policy = policy or ThresholdPolicy()
         self.space = space or ConfigSpace(capacity=2, max_ways=2)
         self.dwell = dwell
         self.replay = replay
         self.label_margin = label_margin
         self.regroup_policy = regroup_policy
+        self.obs = obs if obs is not None else NULL_LOG
+        self.gid = gid
         self.state = ControlState(topology=(self.space.capacity,))
         self._hint: Optional[TopologyLike] = None
 
@@ -105,16 +110,21 @@ class GroupController:
 
     # -- the decision tick ----------------------------------------------------
 
-    def _log_label(self, fv: FeatureVector) -> None:
+    def _log_label(self, fv: FeatureVector
+                   ) -> Optional[Tuple[int, float, float]]:
+        """Log one (features, realized-win) sample; returns the sample's
+        (absolute replay index, realized gain, label) for the decision
+        audit, or None when no label was logged."""
         if self.replay is None or fv.remaining is None \
                 or fv.remaining.size < 2:
-            return
+            return None
         # the lattice argmax scores up to ~hundred candidate partitions of
         # a <=capacity batch — microseconds against the jitted decode step
         # each tick pays for, and only paid when a replay buffer is wired
         _, gain = self.space.best_topology(fv.remaining, self.regroup_policy)
-        self.replay.add(fv.to_array(), 1.0 if gain > self.label_margin
-                        else 0.0)
+        label = 1.0 if gain > self.label_margin else 0.0
+        idx = self.replay.add(fv.to_array(), label)
+        return idx, float(gain), label
 
     def observe(self, fv: FeatureVector, max_ways_now: Optional[int] = None
                 ) -> int:
@@ -130,7 +140,7 @@ class GroupController:
         st.steps_in_state += 1
         for i in range(len(st.part_ages)):
             st.part_ages[i] += 1
-        self._log_label(fv)
+        label_info = self._log_label(fv)
         # no part has dwelt long enough for *any* move to touch it
         if max(st.part_ages) < self.dwell:
             st.history.append((st.step, st.ways, fv.divergence))
@@ -138,6 +148,9 @@ class GroupController:
 
         d = self._proposal(fv)
         target = self._resolve(d, fv, max_ways_now)
+        cur = st.topology
+        applied = False
+        gain = d.gain
         if target is not None:
             gain = d.gain if d.topology == target else self._move_gain(
                 fv, st.topology, target, d.gain)
@@ -156,6 +169,16 @@ class GroupController:
                                                   st.part_ages)
                 st.topology = target
                 st.steps_in_state = 0
+                applied = True
+        if self.obs.enabled:
+            payload = {"from": cur, "target": target, "applied": applied,
+                       "proba": float(d.proba), "gain": float(gain),
+                       "reason": d.reason, "features": fv.to_array(),
+                       "step": st.step}
+            if label_info is not None:
+                payload["replay_idx"], payload["label_gain"], \
+                    payload["label"] = label_info
+            self.obs.emit("policy_decision", gid=self.gid, **payload)
         # a fleet hint survives rejected attempts (capped by a momentary
         # max_ways_now or an under-floor gain) and retires only once the
         # group actually reaches the requested topology

@@ -106,10 +106,18 @@ class ReplayBuffer:
         self.maxlen = maxlen
         self._x: Deque[np.ndarray] = collections.deque(maxlen=maxlen)
         self._y: Deque[float] = collections.deque(maxlen=maxlen)
+        # lifetime add count: sample i's absolute index survives eviction,
+        # so the decision audit (repro.obs.audit) can map an event's
+        # replay_idx back to a retained row via total_added - len(self)
+        self.total_added = 0
 
-    def add(self, features: np.ndarray, label: float) -> None:
+    def add(self, features: np.ndarray, label: float) -> int:
+        """Append a sample; returns its absolute (lifetime) index."""
         self._x.append(np.asarray(features, np.float64))
         self._y.append(float(label))
+        idx = self.total_added
+        self.total_added += 1
+        return idx
 
     def __len__(self) -> int:
         return len(self._x)

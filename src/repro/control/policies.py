@@ -40,6 +40,7 @@ from repro.control.features import SERVE_FEATURES, FeatureVector, ReplayBuffer
 from repro.control.space import ConfigSpace, Topology, TopologyLike, n_parts
 from repro.core import predictor as P
 from repro.core.regroup import regroup_gain
+from repro.obs.events import NULL_LOG
 
 
 @dataclass
@@ -412,6 +413,10 @@ class OnlinePolicy:
         self.refits = 0
         self.drift_resets = 0
         self.refit_info: List[Dict] = []
+        # event stream (repro.obs); the engine that owns the run wires
+        # its log in, so refits/drift-resets land in the same trace as
+        # the decisions they retrain on
+        self.obs = NULL_LOG
 
     @property
     def fitted(self) -> bool:
@@ -447,6 +452,10 @@ class OnlinePolicy:
     def maybe_refit(self) -> bool:
         if self.drift_detected():
             self.reset_on_drift()
+            if self.obs.enabled:
+                self.obs.emit("refit", event="drift_reset",
+                              drift_resets=self.drift_resets,
+                              kept=min(len(self.replay), self.drift_window))
             return False
         buf = self.replay
         if len(buf) < self.min_samples:
@@ -467,6 +476,10 @@ class OnlinePolicy:
                                   for v in info["loss_history"][-5:]],
             "drift_resets": self.drift_resets,
         })
+        if self.obs.enabled:
+            self.obs.emit("refit", event="refit", refits=self.refits,
+                          n=int(info["n"]),
+                          train_accuracy=float(info["train_accuracy"]))
         return True
 
     def decide(self, fv: FeatureVector, cur: TopologyLike) -> Decision:

@@ -47,6 +47,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.configs.base import MigrationConfig, ModelConfig
 from repro.kernels.quantize import INT8_CODE_BYTES, INT8_SCALE_BYTES
+from repro.obs.events import NULL_LOG
 from repro.serve.engine import Request
 
 # (group index, part index); part None = no part preference
@@ -230,6 +231,9 @@ class MigrationPlanner:
         # expected ticks-to-drain per group, refreshed each plan tick —
         # the pressure view routers consult for admission spill
         self._pressure: Dict[int, float] = {}
+        # event stream (repro.obs); the owning engine assigns its log
+        # after construction so steal/migrate executions are traced
+        self.obs = NULL_LOG
 
     # -- telemetry -------------------------------------------------------------
 
@@ -466,6 +470,10 @@ class MigrationPlanner:
         src.stats.steals_out += 1
         dst.stats.steals_in += 1
         self.steals += 1
+        if self.obs.enabled:
+            self.obs.emit("steal", gid=m.dst[0], part=m.dst[1], tick=now,
+                          rid=m.request.rid, src=m.src, dst=m.dst,
+                          gain=float(m.gain))
         return 1
 
     def _execute_live(self, m: Migration, groups: Sequence) -> int:
@@ -481,4 +489,8 @@ class MigrationPlanner:
         assert ok, "insert_live failed after can_insert passed"
         self.live_migrations += 1
         self.stall_ticks_charged += m.stall
+        if self.obs.enabled:
+            self.obs.emit("migrate", gid=m.dst[0], part=m.dst[1],
+                          rid=m.request.rid, src=m.src, dst=m.dst,
+                          stall=int(m.stall), gain=float(m.gain))
         return 1

@@ -61,6 +61,8 @@ from repro.fleet.migrate import MigrationPlanner, fit_part
 from repro.fleet.telemetry import FleetTelemetry
 from repro.fleet.vec import VecGroup, VecState
 from repro.models import transformer as T
+from repro.obs.events import OBS_MODES, EventLog
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.engine import (IDLE, TICKED, ReconfigurableGroup, Request,
                                 make_decode_fn)
 
@@ -164,6 +166,10 @@ def _spill(gi: int, groups: Sequence[ReconfigurableGroup],
     if gj == gi or p.get(gj, 0.0) >= p.get(gi, 0.0):
         return gi                  # nowhere strictly cooler to spill to
     state["spills"] = state.get("spills", 0) + 1
+    obs = state.get("obs")
+    if obs is not None and obs.enabled:
+        obs.emit("spill", gid=gj, src=gi, dst=gj,
+                 pressure=float(p.get(gi, 0.0)))
     _mark_assigned(state, gj)
     return gj
 
@@ -215,6 +221,13 @@ class FleetEngine:
         if fleet.engine not in ("object", "vec"):
             raise ValueError(f"unknown engine {fleet.engine!r}; "
                              f"have ('object', 'vec')")
+        if fleet.obs not in OBS_MODES:
+            raise ValueError(f"unknown obs mode {fleet.obs!r}; "
+                             f"have {OBS_MODES}")
+        # structured event stream + per-tick metrics (repro.obs); every
+        # component below shares this one log so the trace is fleet-wide
+        self.obs = EventLog(mode=fleet.obs)
+        self._metrics = MetricsRegistry() if self.obs.full else None
         self.cfg = model_cfg
         self.params = params
         self.rt = rt
@@ -251,9 +264,13 @@ class FleetEngine:
         # only an online policy consumes the replay buffer; wiring it to
         # every group would pay the per-tick labeling cost for nothing
         grp_replay = getattr(self.policy, "replay", None)
+        if self.policy is not None and hasattr(self.policy, "obs"):
+            # refit/drift-reset events land in the same trace
+            self.policy.obs = self.obs
         grp_kw = dict(rt=rt, amoeba=fleet.amoeba, capacity=fleet.capacity,
                       window=fleet.window, mode=fleet.mode,
-                      policy=self.policy, replay=grp_replay)
+                      policy=self.policy, replay=grp_replay,
+                      obs=self.obs)
         if self._vec is not None:
             self.groups = [
                 VecGroup(model_cfg, params, gid=i, vec_state=self._vec,
@@ -265,7 +282,8 @@ class FleetEngine:
                                     decode_fn=self._decode, **grp_kw)
                 for i in range(fleet.num_groups)]
         self._router = ROUTERS[fleet.router]
-        self._router_state: Dict = {"long_threshold": fleet.long_threshold}
+        self._router_state: Dict = {"long_threshold": fleet.long_threshold,
+                                    "obs": self.obs}
         if fleet.quarantine_group is not None and not (
                 0 <= fleet.quarantine_group < fleet.num_groups):
             raise ValueError(
@@ -283,6 +301,7 @@ class FleetEngine:
             long_threshold=fleet.long_threshold,
             window=fleet.window) if fleet.migrate.enabled else None
         if self.planner is not None:
+            self.planner.obs = self.obs
             # close the router/planner loop: routers consult the
             # planner's pressure view for admission spill (see _spill)
             self._router_state["planner"] = self.planner
@@ -376,6 +395,10 @@ class FleetEngine:
         """Drive the fleet until the trace is fully drained (or max_ticks)."""
         t0 = time.perf_counter()
         while self.wall < max_ticks:
+            if self.obs.enabled:
+                # one clock for every emitter that has no tick in scope
+                # (controller.observe, policy refits, live migrations)
+                self.obs.set_tick(self.wall)
             self._deliver()
             if self.controller is not None and dynamic \
                     and self.fleet.mode == "dynamic":
@@ -408,15 +431,25 @@ class FleetEngine:
                 self.wall = nxt
                 continue
             self.telemetry.on_tick(self.wall, self.groups, ticked)
+            if self._metrics is not None:
+                # vec: one fleet-wide sum instead of a slice per group
+                live = int(self._vec.part_live_n.sum()) \
+                    if self._vec is not None else None
+                self._metrics.sample_fleet(self.wall, self.groups,
+                                           planner=self.planner, live=live)
             self.wall += 1
         if self._vec is not None:
             self._vec.sync_generated()
         for g in self.groups:
             g.finalize()
+        self.obs.meta.setdefault("obs_mode", self.obs.mode)
+        self.obs.meta["wall_ticks"] = self.wall
         summary = self.telemetry.summary(self.groups, self.requests,
                                          policy=self.policy,
                                          fleet_controller=self.controller,
-                                         router_state=self._router_state)
+                                         router_state=self._router_state,
+                                         obs=self.obs,
+                                         metrics=self._metrics)
         # perf trajectory: every summary (and thus every BENCH entry)
         # carries measured wall seconds and simulated ticks per second;
         # cumulative across run() calls on the same engine

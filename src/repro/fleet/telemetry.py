@@ -20,6 +20,15 @@ every group's ``GroupController`` logs one (features, realized-win)
 sample per decision tick into it, and an ``online`` policy refits its
 logistic model from the same buffer — telemetry is the training-data
 pipe of the monitor -> predict -> reconfigure loop.
+
+Telemetry is the *aggregate* view; the per-decision view lives in
+:mod:`repro.obs` — a structured :class:`~repro.obs.events.EventLog`
+(reconfig/steal/migrate/... records with tick + (gid, part) address), a
+per-tick :class:`~repro.obs.metrics.MetricsRegistry`, and the decision
+audit (:mod:`repro.obs.audit`) joining each prediction to its realized
+outcome.  When ``FleetConfig.obs`` is enabled, :meth:`summary` carries
+the event counts under an ``"obs"`` block; exporters and the text
+reports are in :mod:`repro.obs.export` / :mod:`repro.obs.report`.
 """
 from __future__ import annotations
 
@@ -44,6 +53,21 @@ class RollingWindow:
         self._samples.append((tick, cumulative))
         while self._samples and self._samples[0][0] < tick - self.window:
             self._samples.popleft()
+
+    def push_gap(self, ticks: int) -> None:
+        """Carry the last cumulative value across an idle fast-forward.
+
+        Idle ticks produce no tokens/completions, so the counter is flat
+        across the gap; pushing a boundary sample at the far edge keeps
+        the rate window honest (and expires samples older than the
+        window) instead of computing over a stale pre-gap span.  No-op
+        before the first real sample — an all-idle prefix has no counter
+        to carry.
+        """
+        if ticks <= 0 or not self._samples:
+            return
+        t1, v1 = self._samples[-1]
+        self.push(t1 + ticks, v1)
 
     def rate(self) -> float:
         """Mean increase per tick across the retained window."""
@@ -72,14 +96,14 @@ class GroupSnapshot:
             "useful_tokens": self.stats.useful_tokens,
             "efficiency": round(self.stats.efficiency, 4),
             "splits": self.stats.splits, "fuses": self.stats.fuses,
-            "resizes": getattr(self.stats, "resizes", 0),
+            "resizes": self.stats.resizes,
             "completed": self.stats.completed,
             # cross-group migration (repro.fleet.migrate)
-            "stall_ticks": getattr(self.stats, "stall_ticks", 0),
-            "steals_in": getattr(self.stats, "steals_in", 0),
-            "steals_out": getattr(self.stats, "steals_out", 0),
-            "migrations_in": getattr(self.stats, "migrations_in", 0),
-            "migrations_out": getattr(self.stats, "migrations_out", 0),
+            "stall_ticks": self.stats.stall_ticks,
+            "steals_in": self.stats.steals_in,
+            "steals_out": self.stats.steals_out,
+            "migrations_in": self.stats.migrations_in,
+            "migrations_out": self.stats.migrations_out,
         }
 
 
@@ -131,6 +155,10 @@ class FleetTelemetry:
         self.idle_ticks += ticks
         self.group_tick_slots += ticks * n_groups
         self.queue_depths.extend([0] * ticks)
+        # rolling counters are flat across an idle gap; push the boundary
+        # so post-gap rates don't average over a stale pre-gap window
+        self.tokens_window.push_gap(ticks)
+        self.done_window.push_gap(ticks)
 
     # -- at the end -------------------------------------------------------------
 
@@ -144,7 +172,8 @@ class FleetTelemetry:
 
     def summary(self, groups, requests: Sequence[Request],
                 policy=None, fleet_controller=None,
-                router_state: Optional[Dict] = None) -> Dict:
+                router_state: Optional[Dict] = None,
+                obs=None, metrics=None) -> Dict:
         snaps = [GroupSnapshot(
             gid=g.gid, mode=g.mode, is_split=g.is_split,
             queue_depth=len(g.queue), live=len(g.live_requests()),
@@ -153,8 +182,8 @@ class FleetTelemetry:
         slot_steps = sum(g.stats.slot_steps for g in groups)
         useful = sum(g.stats.useful_tokens for g in groups)
         completed = sum(g.stats.completed for g in groups)
-        churn = sum(g.stats.splits + g.stats.fuses
-                    + getattr(g.stats, "resizes", 0) for g in groups)
+        churn = sum(g.stats.splits + g.stats.fuses + g.stats.resizes
+                    for g in groups)
         lats = self.latencies(requests)
         wall = max(self.wall_ticks, 1)
         out = {
@@ -219,14 +248,20 @@ class FleetTelemetry:
         planner = getattr(fleet_controller, "planner", None)
         if planner is not None:
             mig = planner.summary()
-            mig["stall_ticks"] = sum(
-                getattr(g.stats, "stall_ticks", 0) for g in groups)
+            mig["stall_ticks"] = sum(g.stats.stall_ticks for g in groups)
             out["migration"] = mig
         # the cluster layer (repro.cluster): per-chip pressure, regions,
         # and per-tier byte/stall traffic from the tiered planner
         cluster_summary = getattr(fleet_controller, "cluster_summary", None)
         if cluster_summary is not None:
             out["cluster"] = cluster_summary(groups)
+        # the per-decision record (repro.obs): event counts only — full
+        # event dumps go through the exporters, not the summary.  Absent
+        # entirely when obs is off so summaries stay bit-identical.
+        if obs is not None and obs.enabled:
+            out["obs"] = obs.summary()
+            if metrics is not None:
+                out["obs"]["metrics"] = metrics.snapshot()
         tenants = sorted({r.tenant for r in requests})
         if len(tenants) > 1:
             out["per_tenant"] = {}

@@ -423,6 +423,13 @@ class VecGroup(ReconfigurableGroup):
         rem = self.vs.remaining
         return [r for r, row in zip(g.requests, g.idx) if rem[row] > 0]
 
+    def live_count(self) -> int:
+        # O(capacity) from the per-part live counters — identical to the
+        # object engine's len(live_requests()), so per-tick metric
+        # samples (repro.obs.metrics) match across engines
+        base = self.gid * self.vs.C
+        return int(self.vs.part_live_n[base:base + self.vs.C].sum())
+
     def load(self) -> int:
         return int(self.vs.live_load[self.gid]) + self.queue.budget
 

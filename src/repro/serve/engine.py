@@ -50,6 +50,7 @@ from repro.control import (ArrivalRateTracker, ConfigSpace, FeatureVector,
 from repro.control.policies import ReconfigPolicy
 from repro.core.predictor import LogisticModel
 from repro.models import transformer as T
+from repro.obs.events import NULL_LOG, EventLog
 from repro.serve import state_utils as su
 
 
@@ -165,7 +166,8 @@ class ReconfigurableGroup:
                  decode_fn: Optional[Callable] = None,
                  policy: Optional[ReconfigPolicy] = None,
                  model: Optional[LogisticModel] = None,
-                 replay: Optional[ReplayBuffer] = None):
+                 replay: Optional[ReplayBuffer] = None,
+                 obs: Optional[EventLog] = None):
         if mode not in ("dynamic", "fused", "split"):
             raise ValueError(f"unknown group mode {mode!r}")
         if mode == "split" and capacity < 2:
@@ -179,6 +181,9 @@ class ReconfigurableGroup:
         self.window = window
         self.mode = mode
         self.gid = gid
+        # structured event stream (repro.obs); every emission site below
+        # is shared control-plane code so the vec engine inherits it
+        self.obs = obs if obs is not None else NULL_LOG
         self.queue: collections.deque[Request] = collections.deque()
         self.stats = ServeStats()
         self.space = ConfigSpace(
@@ -209,7 +214,8 @@ class ReconfigurableGroup:
         self.controller = GroupController(
             self._policy, self.space, dwell=amoeba.min_phase_steps,
             replay=grp_replay, label_margin=amoeba.label_margin,
-            regroup_policy=amoeba.regroup_policy)
+            regroup_policy=amoeba.regroup_policy,
+            obs=self.obs, gid=gid)
         self._decode = decode_fn or make_decode_fn(model_cfg, rt)
         self._arrivals = ArrivalRateTracker()
         # the current topology: one entry per partition (None = drained)
@@ -413,6 +419,12 @@ class ReconfigurableGroup:
                 out.extend(r for r in g.requests if not r.done)
         return out
 
+    def live_count(self) -> int:
+        """In-flight request count — the metrics registry's live-load
+        gauge.  Overridden O(capacity) by the vec engine; both answers
+        are identical, so per-tick samples match across engines."""
+        return len(self.live_requests())
+
     def part_live(self, i: int) -> List[Request]:
         """Live (not-done) requests currently decoding on part ``i``."""
         g = self._parts[i]
@@ -512,8 +524,12 @@ class ReconfigurableGroup:
                 continue
             if self._part_done(p):
                 self._retire(p)
-                self._parts[i] = self._prefill_wave(self._slots[i], now,
-                                                    part_idx=i)
+                wave = self._prefill_wave(self._slots[i], now, part_idx=i)
+                self._parts[i] = wave
+                if wave is not None and self.obs.enabled:
+                    self.obs.emit("admission", gid=self.gid, part=i,
+                                  tick=now, n=len(wave.requests),
+                                  rids=[r.rid for r in wave.requests])
         live = [p for p in self._parts if p is not None]
         if not live:
             return IDLE
@@ -527,7 +543,16 @@ class ReconfigurableGroup:
             self.controller.observe(fv, max_ways_now=cap)
             desired = self.controller.state.topology
             if desired != self.topology:
+                prev = self.topology
                 self._reconfigure(desired)
+                if self.obs.enabled:
+                    tr = self.controller.state.transitions
+                    gain, reason = 0.0, ""
+                    if tr and tuple(tr[-1][2]) == tuple(desired):
+                        gain, reason = float(tr[-1][3]), tr[-1][4]
+                    self.obs.emit("reconfig", gid=self.gid, tick=now,
+                                  to=desired, gain=gain, reason=reason,
+                                  **{"from": prev})
                 return RECONF
         for i, p in enumerate(self._parts):
             if self._stall[i] > 0:
@@ -539,6 +564,9 @@ class ReconfigurableGroup:
                 if p is not None:
                     self.stats.slot_steps += self._slots[i]
                     self.stats.stall_ticks += 1
+                    if self.obs.enabled:
+                        self.obs.emit("stall", gid=self.gid, part=i,
+                                      tick=now, remaining=self._stall[i])
                 continue
             if p is not None:
                 self._tick_group(p, self._slots[i], now, part_idx=i)

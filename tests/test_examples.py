@@ -49,3 +49,11 @@ def test_work_stealing_example_runs():
 def test_cluster_mesh_example_runs():
     _run("cluster_mesh.py", ["--chips", "2", "--groups-per-chip", "2",
                              "--capacity", "4", "--horizon", "20"])
+
+
+def test_trace_timeline_example_runs(tmp_path):
+    _run("trace_timeline.py",
+         ["--chips", "2", "--groups-per-chip", "2", "--capacity", "4",
+          "--horizon", "20", "--out-dir", str(tmp_path)])
+    assert (tmp_path / "trace_timeline.jsonl").exists()
+    assert (tmp_path / "trace_timeline_chrome.json").exists()

@@ -165,6 +165,32 @@ def test_cluster_engine_identical(setup):
     assert_identical(s_o, s_v)
 
 
+def test_event_streams_identical(setup):
+    """obs='full': both engines must emit the *same events in the same
+    order* — every emission site lives in shared control-plane code, so
+    the streams are bit-identical, not merely equal in aggregate."""
+    cfg, params = setup
+    fc = CASES["migration_sticky"].replace(obs="full")
+    def trace():
+        return imbalanced_trace(40, cfg.vocab_size, seed=5,
+                                shards=fc.num_groups)
+    eng_o = FleetEngine(cfg, params, fleet=fc)
+    eng_v = FleetEngine(cfg, None, fleet=fc.replace(engine="vec"))
+    eng_o.submit(trace())
+    eng_v.submit(trace())
+    s_o, s_v = eng_o.run(), eng_v.run()
+    ev_o = [e.as_dict() for e in eng_o.obs.events()]
+    ev_v = [e.as_dict() for e in eng_v.obs.events()]
+    assert len(ev_o) == len(ev_v)
+    diffs = deep_diff(ev_o, ev_v)
+    assert not diffs, "event streams diverge:\n" + "\n".join(diffs[:20])
+    assert len(ev_o) > 0 and {e["kind"] for e in ev_o} >= {
+        "admission", "reconfig", "policy_decision"}
+    # the obs summary block rides along and agrees too
+    assert_identical(s_o, s_v)
+    assert s_o["obs"]["by_kind"] == s_v["obs"]["by_kind"]
+
+
 # -- vec internals --------------------------------------------------------------
 
 def test_vec_accepts_none_params(setup):
