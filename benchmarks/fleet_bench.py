@@ -33,6 +33,14 @@ sticky routing) replayed with cross-group stealing disabled and
 enabled at equal capacity.  Validation records the p99 speedup and the
 steal/live-migration/stall counters.
 
+**Slack-lease sweep** — the sub-reconfiguration capacity-sharing tier
+(``repro.fleet.lease``): a rotating transient-burst trace (hot phases
+too brief for a topology change to amortize) replayed with
+reconfiguration only, with work stealing, and with slack leases on top
+of stealing.  Validation pins the lease p99 against steal-only and the
+zero-stall contract (no reconfig stall is ever attributable to a
+lease grant).
+
 All runs replay byte-identical traces (same seed) and share one compiled
 decode, so differences are purely scheduling.  Results (slot-step
 efficiency, p50/p95/p99 request latency, throughput, churn, utilization,
@@ -170,6 +178,94 @@ def work_stealing_sweep(cfg, params, rt, decode, *, groups: int,
         "live_migrations": mig_s.get("live_migrations", 0),
         "stall_ticks": mig_s.get("stall_ticks", 0),
         "rejected_amortization": mig_s.get("rejected_amortization", 0),
+    }
+    return out
+
+
+def slack_lease_sweep(cfg, params, rt, decode, *, groups: int,
+                      capacity: int, horizon: int, seed: int) -> Dict:
+    """Slack leases vs stealing vs re-cutting on a transient burst.
+
+    The transient-burst trace rotates a short hot phase across shards —
+    bursts too brief for a topology change to amortize, which is exactly
+    the gap the lease planner fills.  Three identical-capacity sticky
+    fleets replay the same trace:
+
+    * ``reconfig_only`` — dynamic split/fuse is the only adaptation,
+    * ``steal_only``    — plus cross-group work stealing,
+    * ``lease``         — plus slack leases on top of stealing.
+
+    Validation pins the tentpole contract: leases grant, the lease p99
+    is no worse than steal-only, and not one reconfig stall tick is ever
+    attributable to a lease grant.
+    """
+    from repro.configs.base import (AmoebaConfig, FleetConfig, LeaseConfig,
+                                    MigrationConfig)
+    from repro.fleet import FleetEngine, transient_burst_trace
+
+    # a realistic dwell clock: the topology layer holds each phase long
+    # enough that a burst_len-tick burst is gone before a re-cut can
+    # amortize — the regime the lease tier exists for
+    amoeba = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                          min_phase_steps=8)
+    burst_len = max(6, horizon // (2 * groups))
+    variants = {
+        "reconfig_only": (MigrationConfig(enabled=False),
+                          LeaseConfig(enabled=False)),
+        "steal_only": (MigrationConfig(enabled=True),
+                       LeaseConfig(enabled=False)),
+        "lease": (MigrationConfig(enabled=True), LeaseConfig(enabled=True)),
+    }
+    out: Dict = {}
+    for label, (mig, lease) in variants.items():
+        trace = transient_burst_trace(horizon=horizon,
+                                      vocab_size=cfg.vocab_size,
+                                      seed=seed, shards=groups,
+                                      burst_len=burst_len)
+        eng = FleetEngine(cfg, params, rt=rt, decode_fn=decode,
+                          fleet=FleetConfig(
+                              num_groups=groups, capacity=capacity,
+                              router="sticky", mode="dynamic",
+                              rebalance_every=4, migrate=mig,
+                              lease=lease, amoeba=amoeba))
+        eng.submit(trace)
+        s = eng.run()
+        if s["completed"] != len(trace):
+            raise RuntimeError(f"{label}: completed {s['completed']} of "
+                               f"{len(trace)} requests")
+        out[label] = s
+        lat = s["latency"]
+        ls = s.get("lease", {})
+        print(f"{label:14s} ticks={s['wall_ticks']:4d} "
+              f"p50={lat['p50']:5.1f} p99={lat['p99']:5.1f} "
+              f"grants={ls.get('grants', 0)} "
+              f"revokes={ls.get('revokes', 0)} "
+              f"expires={ls.get('expires', 0)} "
+              f"slot_ticks_lent={ls.get('slot_ticks_lent', 0)}")
+    rec, steal, lea = out["reconfig_only"], out["steal_only"], out["lease"]
+    ls = lea["lease"]
+    out["validation"] = {
+        "lease_p99_speedup_vs_steal_only": round(
+            steal["latency"]["p99"] / max(lea["latency"]["p99"], 1e-9), 3),
+        "lease_p99_speedup_vs_reconfig_only": round(
+            rec["latency"]["p99"] / max(lea["latency"]["p99"], 1e-9), 3),
+        "lease_no_worse_than_steal_only": bool(
+            lea["latency"]["p99"] <= steal["latency"]["p99"]),
+        "lease_p50_speedup_vs_steal_only": round(
+            steal["latency"]["p50"] / max(lea["latency"]["p50"], 1e-9), 3),
+        "grants": ls["grants"],
+        "revokes": ls["revokes"],
+        "expires": ls["expires"],
+        "slot_ticks_lent": ls["slot_ticks_lent"],
+        "rejected_amortization": ls["rejected_amortization"],
+        # the zero-stall contract: a lease is pure bookkeeping — no
+        # topology move, no dwell clock, no reconfig stall, ever
+        "lease_stall_ticks_charged": ls["stall_ticks_charged"],
+        "zero_stall_contract_holds": bool(ls["stall_ticks_charged"] == 0),
+        "leases_granted_and_returned": bool(
+            ls["grants"] > 0
+            and ls["grants"] == ls["revokes"] + ls["expires"]
+            and ls["active"] == 0),
     }
     return out
 
@@ -354,6 +450,12 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
         trace_out=trace_out)
 
     jax.clear_caches()
+    print("\n== slack lease sweep (transient bursts, sticky routing) ==")
+    out["slack_lease"] = slack_lease_sweep(
+        cfg, params, rt, decode, groups=groups,
+        capacity=capacity, horizon=horizon, seed=seed)
+
+    jax.clear_caches()
     print("\n== cluster hierarchy sweep (2D mesh, tiered links) ==")
     out["cluster_hierarchy"] = cluster_hierarchy_sweep(
         cfg, params, rt, decode, capacity=capacity,
@@ -432,6 +534,13 @@ def fleet_bench(groups: int = 4, capacity: int = 8, horizon: int = 120,
     print(f"stealing vs no-stealing: p99 {wv['steal_p99_speedup']:.2f}x, "
           f"steals={wv['steals']} live={wv['live_migrations']}, "
           f"wins: {wv['stealing_beats_no_stealing']}")
+    lv = out["slack_lease"]["validation"]
+    print(f"lease vs steal-only: "
+          f"p99 {lv['lease_p99_speedup_vs_steal_only']:.2f}x "
+          f"(vs reconfig-only "
+          f"{lv['lease_p99_speedup_vs_reconfig_only']:.2f}x), "
+          f"grants={lv['grants']} lent={lv['slot_ticks_lent']} "
+          f"slot-ticks, zero-stall: {lv['zero_stall_contract_holds']}")
     hv = out["cluster_hierarchy"]["validation"]
     print(f"hierarchical vs flat-blind: "
           f"p99 {hv['hierarchical_p99_speedup_vs_flat']:.2f}x, "

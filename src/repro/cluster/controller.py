@@ -61,7 +61,7 @@ from repro.control.controller import FleetController
 from repro.control.features import FeatureVector
 from repro.obs.events import NULL_LOG
 from repro.fleet.migrate import Addr, KVTransferCost, Migration, \
-    MigrationPlanner, STEAL, _GroupView
+    MigrationPlanner, STEAL, _GroupView, charge_ticks
 from repro.serve.engine import Request
 
 
@@ -189,8 +189,12 @@ class ClusterPlanner(MigrationPlanner):
                         break
                     ticks = self.true_cost.steal_ticks(
                         len(victim.prompt), donor.gi, recip.gi)
+                    # price at the whole-tick charge the transfer will
+                    # actually pay (ceil past a tick boundary, sub-tick
+                    # free) so the amortization check matches the bill
+                    charged = 0 if math.isinf(ticks) else charge_ticks(ticks)
                     gain = -math.inf if math.isinf(ticks) \
-                        else (wait - ticks) / max(wait, 1.0)
+                        else (wait - charged) / max(wait, 1.0)
                     if gain <= self.cfg.min_gain:
                         # every victim of this pair prices the same tier:
                         # move on to the next recipient
@@ -200,7 +204,7 @@ class ClusterPlanner(MigrationPlanner):
                     plans.append(Migration(STEAL, victim,
                                            src=(donor.gi, None),
                                            dst=(recip.gi, part),
-                                           stall=int(ticks), gain=gain))
+                                           stall=charged, gain=gain))
                     recip.free[part] -= 1
                     donor.queue_len -= 1
                     budget -= 1
@@ -224,7 +228,8 @@ class ClusterPlanner(MigrationPlanner):
             self.dropped_unreachable += 1
             return 0
         tier = self.mesh.tier(src_gi, dst_gi)
-        if ticks <= 0:
+        charged = charge_ticks(ticks)
+        if charged <= 0:
             done = super()._execute_steal(m, groups, now)
         else:
             src = groups[src_gi]
@@ -238,12 +243,12 @@ class ClusterPlanner(MigrationPlanner):
             # in the air until the transfer lands (deliver_in_flight)
             self._flight_seq += 1
             self._in_flight.append(
-                (now + int(ticks), self._flight_seq, m.request, m.dst))
+                (now + charged, self._flight_seq, m.request, m.dst))
             if self.obs.enabled:
                 self.obs.emit("steal", gid=m.dst[0], part=m.dst[1],
                               tick=now, rid=m.request.rid,
                               src=m.src, dst=m.dst, gain=float(m.gain),
-                              in_flight=True, arrive=now + int(ticks),
+                              in_flight=True, arrive=now + charged,
                               tier=tier)
             done = 1
         if done:
@@ -251,7 +256,7 @@ class ClusterPlanner(MigrationPlanner):
                 self.intra_chip_steals += 1
             else:
                 self.cross_chip_steals += 1
-            self._account(tier, nbytes, int(ticks))
+            self._account(tier, nbytes, charged)
         return done
 
     def _execute_live(self, m: Migration, groups: Sequence) -> int:
@@ -264,7 +269,7 @@ class ClusterPlanner(MigrationPlanner):
             return 0
         # the destination part stalls for the *physical* transfer, not
         # whatever a (possibly blind) plan assumed
-        m.stall = int(true)
+        m.stall = charge_ticks(true)
         done = super()._execute_live(m, groups)
         if done:
             tier = self.mesh.tier(src_gi, dst_gi)
@@ -273,7 +278,7 @@ class ClusterPlanner(MigrationPlanner):
             else:
                 self.cross_chip_live += 1
             self._account(tier, self.true_cost.kv_bytes(
-                seq_len, self.model_cfg, self.window), int(true))
+                seq_len, self.model_cfg, self.window), m.stall)
         return done
 
     # -- in-flight transfers ---------------------------------------------------
@@ -366,6 +371,9 @@ class ClusterController:
             fleet.migrate, model_cfg, mesh=mesh, cost=self.cost,
             ccfg=ccfg, long_threshold=fleet.long_threshold,
             window=fleet.window)
+        # optional repro.fleet.lease.LeasePlanner, wired (with the mesh
+        # and the physical cost) by ClusterEngine when leases are on
+        self.leases = None
         # one chip-scoped mix controller per chip: each chip's
         # fused/split mix tracks its *own* long fraction (gated here,
         # so every=1; no planner — migration is the cluster's job)
@@ -475,6 +483,9 @@ class ClusterController:
             self.planner.set_regions(self.regions.region_groups())
         self._plans = self.planner.plan(
             tick, groups, reserved=self.reserved_parts(groups))
+        if self.leases is not None:
+            self.leases.step(tick, groups,
+                             reserved=self.reserved_parts(groups))
         self.rebalances += issued > 0
         return issued
 

@@ -53,6 +53,12 @@ class ClusterEngine(FleetEngine):
         # run()/telemetry drive .controller/.planner exactly as before
         self.controller = self.cluster
         self.planner = self.cluster.planner
+        if self.leases is not None:
+            # cross-group leases now confine to adjacent same-chip pairs
+            # and price their NoC tax with the *physical* tiered cost
+            self.leases.mesh = self.mesh
+            self.leases.cost = self.cluster.cost
+            self.cluster.leases = self.leases
         # the router's admission-spill pressure view rides the tiered
         # planner now
         self._router_state["planner"] = self.planner

@@ -312,6 +312,38 @@ class MigrationConfig:
 
 
 @dataclass(frozen=True)
+class LeaseConfig:
+    """Slack leases: sub-reconfiguration slot borrowing between parts.
+
+    Knobs for :class:`repro.fleet.lease.LeasePlanner`.  A part with idle
+    slots lends them to a sibling part — same group, or an adjacent
+    same-chip group over the NoC — for a bounded term: no topology
+    move, no dwell clock, no reconfiguration stall.  The borrowed slots
+    widen the borrower part's next admission wave; the lender's
+    resident budget shrinks by the same amount, so fleet-wide effective
+    capacity is conserved.  Each grant must clear ``min_gain`` on the
+    same normalized ``move_gain`` scale the topology lattice and the
+    migration planner use: gain = borrowed-queue drain minus the
+    lender's expected backfill loss over the term, over the lender's
+    fused cost.
+    """
+    enabled: bool = False
+    # ticks a lease may run before it expires (the bounded term)
+    max_term: int = 16
+    # max fraction of a part's slot budget out on lease at once; the
+    # planner additionally always keeps >= 1 resident slot per part
+    max_frac: float = 0.5
+    # lender pressure (expected ticks-to-drain) that force-revokes its
+    # outstanding leases early — the lender's own queue heated up
+    revoke_threshold: float = 4.0
+    max_grants: int = 2             # new grants per plan tick
+    min_gain: float = 0.02          # amortization floor (move_gain scale)
+
+    def replace(self, **kw) -> "LeaseConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
 class ClusterConfig:
     """Hierarchical fleet-of-fleets on a 2D chip mesh with tiered links.
 
@@ -378,6 +410,9 @@ class FleetConfig:
     rebalance_every: int = 0
     # cross-group work stealing / live migration (repro.fleet.migrate)
     migrate: MigrationConfig = MigrationConfig()
+    # slack leases: bounded slot borrowing below the reconfiguration
+    # layer (repro.fleet.lease)
+    lease: LeaseConfig = LeaseConfig()
     # reserve a 1-slot quarantine part on this group (exact-composition
     # fleet hint); reserved parts are steal-ineligible for the planner
     quarantine_group: Optional[int] = None

@@ -281,7 +281,7 @@ class FleetController:
                  min_split: int = 0, max_split: Optional[int] = None,
                  deepen_threshold: float = 0.5,
                  planner=None, quarantine: Optional[int] = None,
-                 mix: bool = True):
+                 mix: bool = True, leases=None):
         self.long_threshold = long_threshold
         self.every = max(every, 1)
         self.min_split = min_split
@@ -290,6 +290,9 @@ class FleetController:
         # optional repro.fleet.migrate.MigrationPlanner: plans gathered
         # on the rebalance tick, executed by the engine between ticks
         self.planner = planner
+        # optional repro.fleet.lease.LeasePlanner: slot leases granted /
+        # revoked on the same gate, after steals claimed the free slots
+        self.leases = leases
         # group index holding the reserved (C-1, 1) quarantine slice
         self.quarantine = quarantine
         # False = skip split-mix nudging (migration/quarantine only)
@@ -363,6 +366,9 @@ class FleetController:
         if self.planner is not None:
             self._plans = self.planner.plan(
                 tick, groups, reserved=self.reserved_parts(groups))
+        if self.leases is not None:
+            self.leases.step(tick, groups,
+                             reserved=self.reserved_parts(groups))
         self.rebalances += issued > 0
         return issued
 

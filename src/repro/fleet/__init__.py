@@ -3,9 +3,11 @@
 ``repro.serve`` models one SM pair; this package scales it to a fleet of
 N independently reconfigurable pairs behind a request router, fed by
 trace-driven workloads, rebalanced by cross-group work stealing and
-KV-costed live migration (``repro.fleet.migrate``), and measured by
+KV-costed live migration (``repro.fleet.migrate``), topped up by
+bounded slot leases (``repro.fleet.lease``), and measured by
 fleet-wide telemetry.
 """
+from repro.fleet.lease import Lease, LeasePlanner
 from repro.fleet.migrate import (KVTransferCost, Migration,
                                  MigrationPlanner)
 from repro.fleet.scheduler import (DEFAULT_MODES, ROUTERS, FleetEngine,
@@ -15,7 +17,7 @@ from repro.fleet.traffic import (TenantProfile, bursty_longtail_trace,
                                  imbalanced_trace, make_trace,
                                  multichip_imbalanced_trace,
                                  poisson_trace, skewed_longtail_trace,
-                                 uniform_trace)
+                                 transient_burst_trace, uniform_trace)
 from repro.fleet.vec import TrackedQueue, VecGroup, VecState
 
 __all__ = [
@@ -23,7 +25,9 @@ __all__ = [
     "replay_policies", "FleetTelemetry", "RollingWindow",
     "VecState", "VecGroup", "TrackedQueue",
     "KVTransferCost", "Migration", "MigrationPlanner",
+    "Lease", "LeasePlanner",
     "TenantProfile", "make_trace", "poisson_trace",
     "bursty_longtail_trace", "skewed_longtail_trace",
-    "imbalanced_trace", "multichip_imbalanced_trace", "uniform_trace",
+    "imbalanced_trace", "multichip_imbalanced_trace",
+    "transient_burst_trace", "uniform_trace",
 ]

@@ -54,6 +54,24 @@ from repro.serve.engine import Request
 Addr = Tuple[int, Optional[int]]
 
 
+def charge_ticks(stall: float) -> int:
+    """Integer stall charge for a fractional transfer time.
+
+    The wall tick is the cost quantum, so a transfer that takes any
+    fraction of a tick past a whole boundary occupies the destination
+    for the *next* whole tick — ``int()`` truncation billed a 2.9-tick
+    transfer as 2, systematically under-pricing live migrations and
+    flipping amortization vetoes near the margin.  Sub-tick transfers
+    stay free (the ``TieredTransferCost`` rule: a NoC hop hides behind
+    the decode tick).  Infinite stalls must be vetoed before charging.
+    """
+    if math.isinf(stall):
+        raise ValueError("infinite stall must be vetoed, not charged")
+    if stall < 1.0:
+        return 0
+    return int(math.ceil(stall - 1e-9))
+
+
 def fit_part(topology: Sequence[int], is_long: bool,
              free: Optional[Sequence[int]] = None) -> Optional[int]:
     """The length-aware part choice shared by admissions and steals.
@@ -272,12 +290,16 @@ class MigrationPlanner:
     def _view(self, tick: int, gi: int, g,
               reserved: Set[Addr]) -> _GroupView:
         topo = tuple(getattr(g, "topology", (1,)))
+        # free slots are measured against the lease-adjusted width: a
+        # lent slot is not available to steals, a borrowed one is
+        eff = getattr(g, "effective_slots", None)
         free = []
         for i, slots in enumerate(topo):
             if (gi, i) in reserved:
                 free.append(0)     # quarantine slice: steal-ineligible
             else:
-                free.append(max(slots - len(g.part_live(i)), 0))
+                width = eff(i) if eff is not None else slots
+                free.append(max(width - len(g.part_live(i)), 0))
         return _GroupView(gi=gi, queue_len=len(g.queue), free=free,
                           drain_rate=self._drain_rate(
                               tick, gi, g.stats.completed),
@@ -420,15 +442,20 @@ class MigrationPlanner:
                 considered = True
                 if math.isinf(stall):
                     gain = -math.inf
+                    charged = 0
                 else:
-                    added = dslots * (stall + victim.remaining)
+                    # price the move at the stall actually charged (the
+                    # whole-tick quantum), so the amortization check and
+                    # the destination's bill agree
+                    charged = charge_ticks(stall)
+                    added = dslots * (charged + victim.remaining)
                     gain = (saved - added) / fused
                 if gain <= self.cfg.min_gain:
                     continue
                 if best is None or gain > best.gain:
                     best = Migration(LIVE, victim, src=(donor.gi, pi),
                                      dst=(v.gi, qi),
-                                     stall=int(stall), gain=gain)
+                                     stall=charged, gain=gain)
         if considered and best is None:
             # one vetoed *move* (not one per candidate destination)
             self.rejected_amortization += 1

@@ -57,6 +57,7 @@ from repro.configs.base import FleetConfig, ModelConfig
 from repro.control import ConfigSpace, FleetController, make_policy
 from repro.control.policies import ReconfigPolicy
 from repro.core.predictor import LogisticModel
+from repro.fleet.lease import LeasePlanner
 from repro.fleet.migrate import MigrationPlanner, fit_part
 from repro.fleet.telemetry import FleetTelemetry
 from repro.fleet.vec import VecGroup, VecState
@@ -152,23 +153,33 @@ def _spill(gi: int, groups: Sequence[ReconfigurableGroup],
     the residual imbalance instead of re-homing requests the router
     could have placed right the first time.  Returns the (possibly
     unchanged) group index.
+
+    Every outcome stamps the LRU clock: a pinned admission that *stays*
+    is still an assignment, and skipping the stamp left the spill
+    tie-break ranking cold groups by stale timestamps (two alternating
+    hot shards would ping-pong onto the same cold group).
     """
     planner = state.get("planner")
     thresh = state.get("spill_threshold", 0.0)
     if planner is None or thresh <= 0:
+        _mark_assigned(state, gi)
         return gi
     p = planner.pressure()
     if p.get(gi, 0.0) <= thresh:
+        _mark_assigned(state, gi)
         return gi
     gj = min(range(len(groups)),
              key=lambda i: (p.get(i, 0.0), groups[i].load(),
                             _lru(state, i), i))
     if gj == gi or p.get(gj, 0.0) >= p.get(gi, 0.0):
+        _mark_assigned(state, gi)
         return gi                  # nowhere strictly cooler to spill to
     state["spills"] = state.get("spills", 0) + 1
     obs = state.get("obs")
     if obs is not None and obs.enabled:
-        obs.emit("spill", gid=gj, src=gi, dst=gj,
+        # gid is the acting group (the spill source), like every other
+        # event kind; the destination rides the payload
+        obs.emit("spill", gid=gi, src=gi, dst=gj,
                  pressure=float(p.get(gi, 0.0)))
     _mark_assigned(state, gj)
     return gj
@@ -290,12 +301,13 @@ class FleetEngine:
                 f"quarantine_group {fleet.quarantine_group} out of range "
                 f"for {fleet.num_groups} groups")
         if fleet.mode != "dynamic" and (fleet.migrate.enabled
+                                        or fleet.lease.enabled
                                         or fleet.quarantine_group is not None):
             # the chip-level control loop only runs on dynamic fleets;
             # fail loudly rather than report all-zero steal counters
             raise ValueError(
-                "migrate.enabled / quarantine_group need mode='dynamic' "
-                f"(got mode={fleet.mode!r})")
+                "migrate.enabled / lease.enabled / quarantine_group need "
+                f"mode='dynamic' (got mode={fleet.mode!r})")
         self.planner = MigrationPlanner(
             fleet.migrate, model_cfg,
             long_threshold=fleet.long_threshold,
@@ -307,11 +319,20 @@ class FleetEngine:
             self._router_state["planner"] = self.planner
             self._router_state["spill_threshold"] = \
                 fleet.migrate.spill_threshold
+        self.leases = LeasePlanner(
+            fleet.lease, long_threshold=fleet.long_threshold) \
+            if fleet.lease.enabled else None
+        if self.leases is not None:
+            self.leases.obs = self.obs
+            # the planner is every group's lease book: reconfiguration
+            # force-revokes through it before a composition changes
+            self.leases.bind(self.groups)
         # the chip-level controller runs whenever any chip-wide concern
-        # exists: split-mix rebalancing, migration planning, or a
-        # quarantine reservation to maintain
+        # exists: split-mix rebalancing, migration planning, slack
+        # leasing, or a quarantine reservation to maintain
         need_controller = (fleet.rebalance_every > 0
                            or self.planner is not None
+                           or self.leases is not None
                            or fleet.quarantine_group is not None)
         self.controller = FleetController(
             long_threshold=fleet.long_threshold,
@@ -319,7 +340,8 @@ class FleetEngine:
             else max(fleet.migrate.every, 1),
             planner=self.planner,
             quarantine=fleet.quarantine_group,
-            mix=fleet.rebalance_every > 0) if need_controller else None
+            mix=fleet.rebalance_every > 0,
+            leases=self.leases) if need_controller else None
         self.requests: List[Request] = []
         # min-heap of (arrival, seq, request): O(log n) per submit, and the
         # monotone seq keeps delivery FIFO-stable within an arrival tick

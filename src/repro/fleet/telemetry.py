@@ -104,6 +104,9 @@ class GroupSnapshot:
             "steals_out": self.stats.steals_out,
             "migrations_in": self.stats.migrations_in,
             "migrations_out": self.stats.migrations_out,
+            # slack leases (repro.fleet.lease): slots granted, cumulative
+            "leases_out": self.stats.leases_out,
+            "leases_in": self.stats.leases_in,
         }
 
 
@@ -250,6 +253,11 @@ class FleetTelemetry:
             mig = planner.summary()
             mig["stall_ticks"] = sum(g.stats.stall_ticks for g in groups)
             out["migration"] = mig
+        # slack leases (repro.fleet.lease): grant/revoke/expire counters
+        # plus the zero-stall contract counter
+        leases = getattr(fleet_controller, "leases", None)
+        if leases is not None:
+            out["lease"] = leases.summary()
         # the cluster layer (repro.cluster): per-chip pressure, regions,
         # and per-tier byte/stall traffic from the tiered planner
         cluster_summary = getattr(fleet_controller, "cluster_summary", None)

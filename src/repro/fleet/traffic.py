@@ -47,13 +47,15 @@ class TenantProfile:
     burst_factor: float = 1.0          # >1 turns on on/off modulation
     burst_period: int = 64             # ticks per on/off cycle
     burst_duty: float = 0.25           # fraction of the period at burst rate
+    burst_phase: int = 0               # tick offset of the duty window
     # router shard for sticky (affinity) routing; None = unsharded
     shard: "int | None" = None
 
     def intensity(self, tick: int) -> float:
         if self.burst_factor <= 1.0:
             return self.rate
-        on = (tick % self.burst_period) < self.burst_duty * self.burst_period
+        on = ((tick - self.burst_phase) % self.burst_period
+              < self.burst_duty * self.burst_period)
         return self.rate * (self.burst_factor if on else 1.0)
 
     def sample_length(self, rng: np.random.Generator) -> int:
@@ -177,6 +179,35 @@ def imbalanced_trace(horizon: int, vocab_size: int, seed: int = 0,
             burst_factor=3.0 if hot else 1.0,
             burst_period=50, burst_duty=0.3,
             shard=s))
+    return make_trace(profs, horizon, vocab_size, seed)
+
+
+def transient_burst_trace(horizon: int, vocab_size: int, seed: int = 0,
+                          shards: int = 4, burst_len: int = 40,
+                          base_rate: float = 0.08,
+                          burst_factor: float = 10.0,
+                          p_long: float = 0.15) -> List[Request]:
+    """A rotating hot shard: each burst too short for a re-cut to pay.
+
+    Every shard trickles short turns at ``base_rate``; the shards take
+    turns being hot, each for one ``burst_len`` window of a
+    ``shards * burst_len`` cycle (phased duty windows, never two hot at
+    once).  By the time a topology move or a steal pipeline spins up for
+    one shard's burst, the burst has moved on — while the other shards'
+    groups sit with idle slots the whole time.  This is the regime slack
+    leases (``repro.fleet.lease``) exist for: the hot group borrows its
+    neighbors' idle slots for the burst and hands them back when the
+    rotation moves.  Used by the ``slack_lease`` sweep in
+    ``benchmarks/fleet_bench.py``.
+    """
+    period = shards * burst_len
+    profs = [TenantProfile(
+        name=f"shard{s}", rate=base_rate,
+        length_dist="bimodal", short_tokens=3, long_tokens=24,
+        p_long=p_long, burst_factor=burst_factor,
+        burst_period=period, burst_duty=1.0 / shards,
+        burst_phase=s * burst_len, shard=s)
+        for s in range(shards)]
     return make_trace(profs, horizon, vocab_size, seed)
 
 

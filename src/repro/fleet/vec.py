@@ -423,6 +423,11 @@ class VecGroup(ReconfigurableGroup):
         rem = self.vs.remaining
         return [r for r, row in zip(g.requests, g.idx) if rem[row] > 0]
 
+    def _part_live_n(self, i: int) -> int:
+        # O(1) from the per-part live counter — identical to the object
+        # engine's len(part_live(i)), so lease slot charges stay bit-equal
+        return int(self.vs.part_live_n[self.gid * self.vs.C + i])
+
     def live_count(self) -> int:
         # O(capacity) from the per-part live counters — identical to the
         # object engine's len(live_requests()), so per-tick metric

@@ -18,7 +18,12 @@ admission   a prefill wave admits requests into a part
 policy_decision  a ``GroupController`` resolves a topology proposal
 refit       an online policy refits (or drift-resets) its predictor
 stall       a part burns a tick paying a KV-transfer stall
+lease       a slot lease is granted / revoked / expired (``LeasePlanner``)
 ========== =================================================================
+
+Every event stamps ``gid`` with the *acting* group (the spill source,
+the lease lender, the reconfiguring group); counterpart addresses ride
+the payload (``dst``).
 
 The log has three modes (``FleetConfig.obs``):
 
@@ -45,7 +50,7 @@ import numpy as np
 
 EVENT_KINDS = (
     "reconfig", "steal", "migrate", "spill", "region_grab",
-    "admission", "policy_decision", "refit", "stall",
+    "admission", "policy_decision", "refit", "stall", "lease",
 )
 
 OBS_MODES = ("off", "summary", "full")

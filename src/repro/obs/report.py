@@ -37,7 +37,18 @@ def _fmt_payload(kind: str, p: Dict[str, Any]) -> str:
                 + (f" stall={p['stall']}" if p.get("stall") else "")
                 + (f" tier={p['tier']}" if p.get("tier") else ""))
     if kind == "spill":
+        # gid (the timeline address column) is the acting source group;
+        # the payload still carries both endpoints
         return f"g{p.get('src')} -> g{p.get('dst')}"
+    if kind == "lease":
+        dst = p.get("dst") or (None, None)
+        s = (f"{p.get('action')} l{p.get('lid')} {p.get('slots')} slot(s)"
+             f" -> g{dst[0]}/p{dst[1]}")
+        if p.get("action") == "grant":
+            s += f" term={p.get('term')} gain={p.get('gain', 0):+.3f}"
+        elif p.get("reason"):
+            s += f" [{p.get('reason')}]"
+        return s
     if kind == "admission":
         return f"n={p.get('n')} rids={p.get('rids')}"
     if kind == "policy_decision":

@@ -99,6 +99,9 @@ class ServeStats:
     steals_out: int = 0            # queued requests stolen away
     migrations_in: int = 0         # live requests migrated into this group
     migrations_out: int = 0        # live requests migrated away
+    # -- slack leases (repro.fleet.lease) -----------------------------------
+    leases_out: int = 0            # leases granted as lender
+    leases_in: int = 0             # leases received as borrower
 
     @property
     def efficiency(self) -> float:
@@ -229,6 +232,18 @@ class ReconfigurableGroup:
         # per-part stall ticks: a part receiving migrated KV holds its
         # slots busy (repro.fleet.migrate charges the transfer here)
         self._stall: List[int] = [0] * len(self._slots)
+        # slack-lease books (repro.fleet.lease): slots this part lent
+        # away / borrowed in.  The partition budget ``_slots`` never
+        # changes under a lease — only the *effective* admission and
+        # charge width does — so lent + resident always sum to the
+        # budget.  ``_lease_book`` is the owning LeasePlanner (assigned
+        # by the fleet engine); a reconfiguration force-revokes through
+        # it before re-cutting, so no slots leak across the boundary.
+        self._lent: List[int] = [0] * len(self._slots)
+        self._borrowed: List[int] = [0] * len(self._slots)
+        self._lease_book = None
+        self._lease_touched = False
+        self._now_tick = 0             # stamped each step; lease accrual
 
     # -- admission -------------------------------------------------------------
 
@@ -355,6 +370,14 @@ class ReconfigurableGroup:
         reconfiguration never changes any request's results — only which
         rows decode in lockstep and how many slots each cohort owns.
         """
+        # leases are defined against the *current* composition; a new cut
+        # invalidates every book entry, so the planner force-revokes both
+        # directions (ours and our counterparties') before parts move
+        if self._lease_book is not None:
+            self._lease_book.force_revoke(self.gid, reason="reconfig",
+                                          tick=self._now_tick)
+        self._lent = [0] * len(self._slots)
+        self._borrowed = [0] * len(self._slots)
         target = self.space.as_topology(target)
         live = [p for p in self._parts if p is not None]
         merged = self._merge_parts(live)
@@ -372,6 +395,7 @@ class ReconfigurableGroup:
             self._parts = [merged]
             self._slots = [self.capacity]
             self._stall = [pending_stall]
+            self._lent, self._borrowed = [0], [0]
             return
         parts_idx = self.space.partition(
             list(range(len(merged.requests))), merged.remaining, target,
@@ -379,6 +403,8 @@ class ReconfigurableGroup:
         self._parts = [self._make_part(merged, ids) for ids in parts_idx]
         self._slots = list(target)
         self._stall = [pending_stall] * len(self._slots)
+        self._lent = [0] * len(self._slots)
+        self._borrowed = [0] * len(self._slots)
 
     def _merge_parts(self, live: List[_Group]) -> _Group:
         """Concatenate live parts (in part order) into one batch."""
@@ -437,12 +463,60 @@ class ReconfigurableGroup:
         return (sum(r.remaining for r in self.live_requests())
                 + sum(r.max_new_tokens for r in self.queue))
 
+    # -- slack leases (driven by repro.fleet.lease) ----------------------------
+
+    def effective_slots(self, part: int) -> int:
+        """Admission/charge width of ``part`` under the lease books."""
+        return self._slots[part] - self._lent[part] + self._borrowed[part]
+
+    def _part_live_n(self, part: int) -> int:
+        """Live member count of ``part`` — overridable O(1) in the vec
+        engine; both answers are identical, so charges stay bit-equal."""
+        return len(self.part_live(part))
+
+    def _slot_charge(self, part: int) -> int:
+        """Slot-steps one tick of ``part`` costs.
+
+        Normally the effective width.  After a lease releases while the
+        borrowed cohort is still decoding, the part transiently holds
+        more live rows than its effective width — those rows still
+        occupy physical slots, so the charge follows the occupancy.
+        Untouched groups keep the original constant-width charge.
+        """
+        if not self._lease_touched:
+            return self._slots[part]   # books are all-zero: eff == slots
+        return max(self.effective_slots(part), self._part_live_n(part))
+
+    def lease_out(self, part: int, n: int) -> None:
+        """Lender side of a grant: ``n`` slots leave the resident budget."""
+        assert 0 < n and self._lent[part] + n < self._slots[part] \
+            + self._borrowed[part], (self.gid, part, n, self._lent)
+        self._lent[part] += n
+        self._lease_touched = True
+
+    def lease_back(self, part: int, n: int) -> None:
+        """Lender side of a release: ``n`` slots return home."""
+        assert 0 < n <= self._lent[part], (self.gid, part, n, self._lent)
+        self._lent[part] -= n
+
+    def lease_in(self, part: int, n: int) -> None:
+        """Borrower side of a grant: ``n`` foreign slots widen the part."""
+        assert n > 0, (self.gid, part, n)
+        self._borrowed[part] += n
+        self._lease_touched = True
+
+    def lease_return(self, part: int, n: int) -> None:
+        """Borrower side of a release."""
+        assert 0 < n <= self._borrowed[part], \
+            (self.gid, part, n, self._borrowed)
+        self._borrowed[part] -= n
+
     # -- cross-group migration (driven by repro.fleet.migrate) -----------------
 
     def can_insert(self, part: int) -> bool:
         """True when part ``part`` has a free decode slot for a live row."""
         return (0 <= part < len(self._slots)
-                and len(self.part_live(part)) < self._slots[part])
+                and len(self.part_live(part)) < self.effective_slots(part))
 
     def extract_live(self, req: Request):
         """Remove one in-flight request and return its decode state.
@@ -516,6 +590,7 @@ class ReconfigurableGroup:
         """
         if self.mode == "fused":
             dynamic = False
+        self._now_tick = now
         # each partition admits new work independently the moment it
         # drains, up to its own slot budget; a stalled part's slots are
         # busy receiving migrated KV and admit nothing
@@ -524,7 +599,8 @@ class ReconfigurableGroup:
                 continue
             if self._part_done(p):
                 self._retire(p)
-                wave = self._prefill_wave(self._slots[i], now, part_idx=i)
+                wave = self._prefill_wave(self.effective_slots(i), now,
+                                          part_idx=i)
                 self._parts[i] = wave
                 if wave is not None and self.obs.enabled:
                     self.obs.emit("admission", gid=self.gid, part=i,
@@ -562,14 +638,14 @@ class ReconfigurableGroup:
                 # charges nothing — it holds no work to stall
                 self._stall[i] -= 1
                 if p is not None:
-                    self.stats.slot_steps += self._slots[i]
+                    self.stats.slot_steps += self._slot_charge(i)
                     self.stats.stall_ticks += 1
                     if self.obs.enabled:
                         self.obs.emit("stall", gid=self.gid, part=i,
                                       tick=now, remaining=self._stall[i])
                 continue
             if p is not None:
-                self._tick_group(p, self._slots[i], now, part_idx=i)
+                self._tick_group(p, self._slot_charge(i), now, part_idx=i)
         self.stats.ticks += 1
         return TICKED
 

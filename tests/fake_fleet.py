@@ -27,6 +27,10 @@ class FakeGroup:
             else [[] for _ in self._topology]
         assert len(self._parts) == len(self._topology)
         self.stall: List[int] = [0] * len(self._topology)
+        # slack-lease books, mirroring ReconfigurableGroup
+        self._lent: List[int] = [0] * len(self._topology)
+        self._borrowed: List[int] = [0] * len(self._topology)
+        self._lease_book = None
 
     @property
     def topology(self):
@@ -34,6 +38,31 @@ class FakeGroup:
 
     def part_live(self, i: int) -> List[Request]:
         return [r for r in self._parts[i] if not r.done]
+
+    # -- slack leases (same surface as ReconfigurableGroup) --------------------
+
+    def effective_slots(self, i: int) -> int:
+        return self._topology[i] - self._lent[i] + self._borrowed[i]
+
+    def _part_live_n(self, i: int) -> int:
+        return len(self.part_live(i))
+
+    def lease_out(self, i: int, n: int) -> None:
+        assert 0 < n and self._lent[i] + n < self._topology[i] \
+            + self._borrowed[i]
+        self._lent[i] += n
+
+    def lease_back(self, i: int, n: int) -> None:
+        assert 0 < n <= self._lent[i]
+        self._lent[i] -= n
+
+    def lease_in(self, i: int, n: int) -> None:
+        assert n > 0
+        self._borrowed[i] += n
+
+    def lease_return(self, i: int, n: int) -> None:
+        assert 0 < n <= self._borrowed[i]
+        self._borrowed[i] -= n
 
     def live_requests(self) -> List[Request]:
         return [r for p in self._parts for r in p if not r.done]

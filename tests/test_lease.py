@@ -1,0 +1,284 @@
+"""Slack-lease invariants (repro.fleet.lease).
+
+Planner-level contracts run against the ``fake_fleet`` protocol fakes
+(no model): grants conserve slot budgets, terms are bounded, revocation
+fires on lender heat and borrower idleness, pricing respects the
+``move_gain`` floor, and mesh wiring confines cross-group leases to
+adjacent same-chip pairs with dead links vetoed.  The end-to-end section
+drives a real lease-enabled ``FleetEngine`` to pin the zero-stall
+contract and the reconfig force-revoke boundary.  The same conservation
+invariants are fuzzed under hypothesis in ``test_lease_properties.py``.
+"""
+import jax
+import pytest
+
+from fake_fleet import FakeGroup
+from repro.cluster import ClusterMesh, TieredTransferCost
+from repro.configs import get_config
+from repro.configs.base import (AmoebaConfig, ClusterConfig, FleetConfig,
+                                LeaseConfig, MigrationConfig)
+from repro.fleet import FleetEngine, LeasePlanner, transient_burst_trace
+from repro.models import transformer as T
+from repro.serve import Request
+
+AMOEBA = AmoebaConfig(split_threshold=0.3, fuse_threshold=0.05,
+                      min_phase_steps=2)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-14b", reduced=True)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def lease_planner(**kw):
+    kw.setdefault("enabled", True)
+    return LeasePlanner(LeaseConfig(**kw), long_threshold=24)
+
+
+def req(rid, tokens, generated=0):
+    r = Request(rid, [1] * 4, tokens)
+    r.generated = [0] * generated
+    return r
+
+
+def hot_borrower(gid=1, slots=4, queue=6):
+    """A group with every slot busy and a backlog: the lease customer."""
+    return FakeGroup(gid, (slots,),
+                     parts=[[req(100 * gid + i, 5, 1)
+                             for i in range(slots)]],
+                     queue=[req(100 * gid + 50 + i, 4)
+                            for i in range(queue)])
+
+
+def assert_books_clean(p, groups):
+    assert p.active == []
+    for g in groups:
+        assert all(x == 0 for x in g._lent), (g.gid, g._lent)
+        assert all(x == 0 for x in g._borrowed), (g.gid, g._borrowed)
+
+
+# -- granting ------------------------------------------------------------------
+
+def test_grant_widens_borrower_and_shrinks_lender():
+    lender = FakeGroup(0, (4,))            # fully idle
+    borrower = hot_borrower()
+    groups = [lender, borrower]
+    p = lease_planner()
+    p.bind(groups)
+    assert lender._lease_book is p
+    p.step(0, groups)
+    assert p.grants == 1 and len(p.active) == 1
+    n = p.active[0].slots
+    # max_frac 0.5 of a 4-slot part: at most 2 slots out
+    assert 0 < n <= 2
+    assert lender._lent == [n] and borrower._borrowed == [n]
+    assert lender.effective_slots(0) == 4 - n
+    assert borrower.effective_slots(0) == 4 + n
+    assert p.lent_at((0, 0)) == n and p.borrowed_at((1, 0)) == n
+    assert lender.stats.leases_out == n
+    assert borrower.stats.leases_in == n
+    # fleet-wide effective capacity is conserved
+    assert sum(g.effective_slots(i) for g in groups
+               for i in range(len(g.topology))) == 8
+
+
+def test_term_is_bounded_and_expiry_returns_the_slots():
+    groups = [FakeGroup(0, (4,)), hot_borrower()]
+    p = lease_planner(max_term=8)
+    p.bind(groups)
+    p.step(0, groups)
+    (l,) = p.active
+    assert l.expires - l.granted <= 8
+    groups[1].queue.clear()                # burst over before expiry
+    groups[1]._parts[0].clear()
+    p.step(l.expires, groups)
+    assert p.expires == 1
+    assert_books_clean(p, groups)
+
+
+def test_lender_heat_revokes_early():
+    groups = [FakeGroup(0, (4,)), hot_borrower()]
+    p = lease_planner()
+    p.bind(groups)
+    p.step(0, groups)
+    assert p.grants == 1
+    # the lender's own queue heats past revoke_threshold: slots go home
+    # well before the term is up
+    groups[0].queue.extend(req(200 + i, 8) for i in range(6))
+    p.step(4, groups)
+    assert p.revokes == 1 and p.expires == 0
+    assert_books_clean(p, groups)
+
+
+def test_idle_borrower_returns_slots_before_expiry():
+    groups = [FakeGroup(0, (4,)), hot_borrower()]
+    p = lease_planner()
+    p.bind(groups)
+    p.step(0, groups)
+    assert p.grants == 1
+    groups[1].queue.clear()                # burst passed, width unused
+    p.step(4, groups)
+    assert p.revokes == 1
+    assert_books_clean(p, groups)
+
+
+def test_min_gain_vetoes_and_counts_rejections():
+    groups = [FakeGroup(0, (4,)), hot_borrower()]
+    # the fixture's best gain is exactly 0.5 (2 slots, full term, fused
+    # 4*term): a floor at 0.5 vetoes it
+    p = lease_planner(min_gain=0.5)
+    p.bind(groups)
+    p.step(0, groups)
+    assert p.grants == 0 and p.rejected_amortization == 1
+    assert_books_clean(p, groups)
+
+
+def test_lender_always_keeps_one_resident_slot():
+    # max_frac=1.0 would allow lending a part entire: the resident-slot
+    # floor must still hold one back, or the part could never drain its
+    # own admissions again
+    groups = [FakeGroup(0, (2,)), hot_borrower()]
+    p = lease_planner(max_frac=1.0)
+    p.bind(groups)
+    p.step(0, groups)
+    assert p.grants == 1
+    assert groups[0]._lent == [1]
+    assert groups[0].effective_slots(0) == 1
+
+
+def test_intra_group_lease_from_stranded_slots():
+    """A split group lends its quarantine slice's stranded idle slots to
+    its own wide part — no lender-heat veto (the 'lender queue' is the
+    borrower's own backlog) and no backfill loss."""
+    g = FakeGroup(0, (5, 3),
+                  parts=[[req(i, 5, 1) for i in range(5)],
+                         [req(10, 40, 1)]],   # 1 long rider, 2 stranded
+                  queue=[req(20 + i, 4) for i in range(6)])
+    p = lease_planner()
+    p.bind([g])
+    p.step(0, [g])
+    assert p.grants == 1
+    (l,) = p.active
+    assert l.lender == (0, 1) and l.borrower == (0, 0)
+    assert g.effective_slots(0) == 5 + l.slots
+    assert g.effective_slots(1) == 3 - l.slots
+
+
+def test_reserved_parts_neither_lend_nor_borrow():
+    lender = FakeGroup(0, (4,))
+    borrower = hot_borrower()
+    groups = [lender, borrower]
+    p = lease_planner()
+    p.bind(groups)
+    p.step(0, groups, reserved={(0, 0), (1, 0)})
+    assert p.grants == 0 and p.active == []
+
+
+# -- mesh confinement (the cluster wiring) -------------------------------------
+
+def _mesh_fixture(noc_bandwidth=4e9):
+    mesh = ClusterMesh(num_groups=4, groups_per_chip=2)
+    ccfg = ClusterConfig(groups_per_chip=2, noc_bandwidth=noc_bandwidth)
+    cost = TieredTransferCost.from_config(mesh, ccfg, dtype_bytes=2,
+                                          quantized=False)
+    return mesh, cost
+
+
+def test_mesh_confines_leases_to_same_chip_neighbors():
+    mesh, cost = _mesh_fixture()
+    chipmates = mesh.chip_groups(1)        # the borrower's chip
+    gb = chipmates[-1]
+    groups = [hot_borrower(gid=g, queue=6) if g == gb
+              else FakeGroup(g, (4,)) for g in range(4)]
+    p = lease_planner()
+    p.mesh, p.cost = mesh, cost
+    p.bind(groups)
+    p.step(0, groups)
+    assert p.grants >= 1
+    # every lender is a same-chip neighbor, never a cross-chip group
+    for l in p.active:
+        assert l.lender[0] in chipmates, (l.lender, chipmates)
+
+
+def test_dead_noc_link_vetoes_cross_group_leases():
+    mesh, cost = _mesh_fixture(noc_bandwidth=0.0)   # NoC down
+    chipmates = mesh.chip_groups(1)
+    gb = chipmates[-1]
+    groups = [hot_borrower(gid=g, queue=6) if g == gb
+              else FakeGroup(g, (4,)) for g in range(4)]
+    p = lease_planner()
+    p.mesh, p.cost = mesh, cost
+    p.bind(groups)
+    p.step(0, groups)
+    assert p.grants == 0 and p.active == []
+
+
+# -- force-revoke (the reconfiguration boundary) -------------------------------
+
+def test_force_revoke_clears_every_lease_touching_the_group():
+    groups = [FakeGroup(0, (4, 4)), hot_borrower(gid=1),
+              hot_borrower(gid=2)]
+    p = lease_planner(max_grants=4)
+    p.bind(groups)
+    p.step(0, groups)
+    assert p.grants >= 2                   # lender 0 serves both hot groups
+    p.force_revoke(0, reason="reconfig")
+    assert_books_clean(p, groups)
+    assert p.revokes >= 2
+
+
+# -- end to end (real engine) --------------------------------------------------
+
+def _lease_fleet(enabled, obs="summary", **kw):
+    fleet = FleetConfig(num_groups=2, capacity=4, router="sticky",
+                        mode="dynamic", engine="object", obs=obs,
+                        migrate=MigrationConfig(enabled=True),
+                        amoeba=AMOEBA, **kw)
+    return fleet.replace(lease=fleet.lease.replace(enabled=enabled))
+
+
+def test_lease_fleet_end_to_end_zero_stall_and_clean_books(setup):
+    """Leases grant under a rotating burst, every one is returned, the
+    books are clean after reconfigs, and — the contract — no reconfig
+    stall is ever attributable to a lease grant."""
+    cfg, params = setup
+    eng = FleetEngine(cfg, params, fleet=_lease_fleet(True, obs="full"))
+    trace = transient_burst_trace(60, cfg.vocab_size, seed=1, shards=2,
+                                  burst_len=20)
+    eng.submit(trace)
+    s = eng.run(max_ticks=400)
+    assert s["completed"] == s["submitted"] == len(trace)
+    lease = s["lease"]
+    assert lease["grants"] > 0
+    assert lease["stall_ticks_charged"] == 0
+    assert lease["active"] == 0
+    assert lease["grants"] == lease["revokes"] + lease["expires"]
+    assert s["obs"]["by_kind"]["lease"] \
+        == lease["grants"] + lease["revokes"] + lease["expires"]
+    # groups reconfigured during the run, so leases crossed the
+    # force-revoke boundary; the books must still balance
+    assert s["obs"]["by_kind"].get("reconfig", 0) > 0
+    for g in eng.groups:
+        assert all(x == 0 for x in g._lent)
+        assert all(x == 0 for x in g._borrowed)
+    snaps = s["groups"]
+    assert sum(x["leases_out"] for x in snaps) \
+        == sum(x["leases_in"] for x in snaps) > 0
+
+
+def test_lease_disabled_summary_is_unchanged(setup):
+    """lease.enabled=False must be bit-identical to a build without the
+    subsystem: no lease block, same books as the seed path."""
+    cfg, params = setup
+    results = {}
+    for label, enabled in (("off", False), ("on", True)):
+        eng = FleetEngine(cfg, params, fleet=_lease_fleet(enabled))
+        trace = transient_burst_trace(40, cfg.vocab_size, seed=2,
+                                      shards=2, burst_len=16)
+        eng.submit(trace)
+        results[label] = eng.run(max_ticks=400)
+    assert "lease" not in results["off"]
+    assert results["off"]["completed"] == results["off"]["submitted"]
+    assert "lease" in results["on"]

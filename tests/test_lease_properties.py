@@ -1,0 +1,114 @@
+"""Hypothesis properties for the slack-lease planner.
+
+Follows the repo's importorskip pattern (cf. test_migrate_properties.py);
+the same contracts are pinned with concrete cases in test_lease.py,
+which always runs.  The fuzzed invariant is the ISSUE's conservation
+contract: leases conserve slot budgets — at every step, each part's
+``lent + resident`` equals its partition budget (fleet-wide effective
+capacity never changes), the planner's book agrees exactly with every
+group's counters, no lease outlives its term, and a force-revoke (the
+reconfiguration boundary) leaves zero slots leaked.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from fake_fleet import FakeGroup
+from repro.configs.base import LeaseConfig
+from repro.fleet.lease import LeasePlanner
+from repro.serve.engine import Request
+
+
+def _req(rid, tokens, started=False):
+    r = Request(rid, [1, 2, 3], tokens)
+    if started:
+        r.generated = [0]
+    return r
+
+
+@st.composite
+def lease_fleets(draw):
+    n_groups = draw(st.integers(2, 4))
+    rid = iter(range(100_000))
+    groups = []
+    for gi in range(n_groups):
+        topo = tuple(draw(st.lists(st.integers(2, 5),
+                                   min_size=1, max_size=3)))
+        parts = []
+        for slots in topo:
+            k = draw(st.integers(0, slots))
+            parts.append([_req(next(rid), draw(st.integers(2, 40)), True)
+                          for _ in range(k)])
+        queue = [_req(next(rid), draw(st.integers(1, 40)))
+                 for _ in range(draw(st.integers(0, 8)))]
+        groups.append(FakeGroup(gi, topo, queue=queue, parts=parts))
+    return groups
+
+
+def _assert_conserved(p, groups):
+    total_budget = total_eff = 0
+    for gi, g in enumerate(groups):
+        for i, slots in enumerate(g.topology):
+            # the planner's book is the single source of truth and the
+            # group counters must mirror it exactly
+            assert g._lent[i] == p.lent_at((gi, i)) >= 0
+            assert g._borrowed[i] == p.borrowed_at((gi, i)) >= 0
+            # lent + resident = partition budget, with >= 1 resident
+            resident = slots - g._lent[i]
+            assert resident + g._lent[i] == slots
+            assert resident + g._borrowed[i] >= 1
+            total_budget += slots
+            total_eff += g.effective_slots(i)
+    # fleet-wide effective capacity is conserved by every grant/return
+    assert total_eff == total_budget
+
+
+@given(lease_fleets(),
+       st.lists(st.tuples(st.integers(0, 3),      # queue churn target
+                          st.integers(0, 8),      # new queue length
+                          st.integers(0, 30),     # completions added
+                          st.booleans()),         # force-revoke it too?
+               min_size=1, max_size=12),
+       st.integers(1, 16), st.floats(0.1, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_leases_conserve_slot_budgets(groups, churn, max_term, max_frac):
+    p = LeasePlanner(LeaseConfig(enabled=True, max_term=max_term,
+                                 max_frac=max_frac, max_grants=4))
+    p.bind(groups)
+    rid = iter(range(200_000, 300_000))
+    tick = 0
+    for target, qlen, done, revoke in churn:
+        gi = target % len(groups)
+        g = groups[gi]
+        g.queue.clear()
+        g.queue.extend(_req(next(rid), 8) for _ in range(qlen))
+        g.stats.completed += done
+        if revoke:
+            p.force_revoke(gi)
+            assert not any(l.lender[0] == gi or l.borrower[0] == gi
+                           for l in p.active)
+            assert all(x == 0 for x in g._lent)
+            assert all(x == 0 for x in g._borrowed)
+        p.step(tick, groups)
+        _assert_conserved(p, groups)
+        # no lease outlives its term
+        assert all(l.expires > tick for l in p.active)
+        assert all(l.slots > 0 for l in p.active)
+        tick += 3
+    # drain: once every queue is empty, every lease comes home (idle
+    # borrowers are revoked, stragglers expire) — no slot leaks
+    for g in groups:
+        g.queue.clear()
+    for _ in range(2):
+        p.step(tick, groups)
+        tick += max_term + 1
+    assert p.active == []
+    for g in groups:
+        assert all(x == 0 for x in g._lent), (g.gid, g._lent)
+        assert all(x == 0 for x in g._borrowed), (g.gid, g._borrowed)
+    # the grant ledger balances: everything granted was returned
+    assert p.grants == p.revokes + p.expires
+    # and the zero-stall contract held throughout
+    assert p.stall_ticks_charged == 0

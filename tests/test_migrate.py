@@ -191,6 +191,59 @@ def test_zero_bandwidth_fails_every_live_amortization_but_steals_flow():
     assert p.rejected_amortization > 0
 
 
+def test_charge_ticks_whole_tick_quantum():
+    from repro.fleet.migrate import charge_ticks
+    assert charge_ticks(0.4) == 0      # sub-tick: hides behind decode
+    assert charge_ticks(1.0) == 1
+    assert charge_ticks(2.0) == 2
+    assert charge_ticks(2.9) == 3      # int() would have billed 2
+    with pytest.raises(ValueError):
+        charge_ticks(float("inf"))
+
+
+def test_fractional_stall_ceil_flips_the_veto_at_the_boundary():
+    """A 2.9-tick transfer occupies the destination for 3 whole ticks;
+    billing it as 2 (truncation) let moves through that do not amortize.
+
+    The fixture sits exactly between the two billings: with the donor
+    part at remaining [59, 2, 2, 2] and a 2-slot destination, the gain
+    is (110 - 2c)/236 — 0.449 under truncation (c=2), 0.441 under ceil
+    (c=3) — so min_gain = 0.445 vetoes iff the charge is honest.
+    """
+    from dataclasses import dataclass
+
+    @dataclass(frozen=True)
+    class _FracCost(KVTransferCost):
+        ticks: float = 2.9
+
+        def stall_ticks(self, seq_len, model_cfg, window=None,
+                        src=None, dst=None):
+            return self.ticks
+
+    def build():
+        lives = [req(0, 60, generated=1)] + \
+            [req(i, 3, generated=1) for i in (1, 2, 3)]
+        return FakeGroup(0, (4,), parts=[lives]), FakeGroup(1, (2, 2))
+
+    def plan_live(min_gain, ticks):
+        donor, recip = build()
+        p = MigrationPlanner(
+            MigrationConfig(enabled=True, live=True, min_gain=min_gain),
+            model_cfg(), long_threshold=24, window=256,
+            cost=_FracCost(ticks=ticks))
+        return [m for m in p.plan(0, [donor, recip])
+                if m.kind == LIVE], p
+
+    live, p = plan_live(0.445, 2.9)
+    assert live == [] and p.rejected_amortization == 1
+    # below the honest bar the move flows — billed the whole 3 ticks
+    live, _ = plan_live(0.43, 2.9)
+    assert len(live) == 1 and live[0].stall == 3
+    # sub-tick transfers stay free (the NoC-hop-hides-behind-decode rule)
+    live, _ = plan_live(0.445, 0.4)
+    assert len(live) == 1 and live[0].stall == 0
+
+
 def test_execute_conserves_requests_and_budgets():
     donor = FakeGroup(0, (4,), parts=[[req(0, 50, generated=1),
                                        req(1, 2, generated=1)]],

@@ -413,6 +413,7 @@ def _summary_fixture(requests):
         ticks = slot_steps = useful_tokens = completed = 0
         splits = fuses = resizes = stall_ticks = 0
         steals_in = steals_out = migrations_in = migrations_out = 0
+        leases_out = leases_in = 0
         efficiency = 0.0
 
     class _G:

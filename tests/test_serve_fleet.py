@@ -325,3 +325,55 @@ def test_router_tie_break_is_least_recently_assigned():
              for i in range(100)]
     counts = [picks.count(g) for g in range(len(groups))]
     assert min(counts) >= 20, counts
+
+
+class _StubPlanner:
+    """Pressure-view stub for router-level spill tests."""
+
+    def __init__(self, pressure):
+        self._p = dict(pressure)
+
+    def pressure(self):
+        return self._p
+
+
+def test_spill_stay_stamps_lru_so_spills_rotate_cold_groups():
+    """A pinned admission that *stays* is still an assignment.
+
+    Regression: ``_spill`` only stamped the LRU clock when it actually
+    spilled, so a cold group that had just absorbed pinned admissions
+    still ranked as least-recently-assigned and the next hot-shard spill
+    double-booked it instead of rotating to its equally-cold sibling.
+    """
+    from repro.fleet.scheduler import route_sticky
+
+    groups = [_FakeRoutee(False, 0) for _ in range(4)]
+    state = {"planner": _StubPlanner({0: 9.0, 1: 9.0, 2: 0.0, 3: 0.0}),
+             "spill_threshold": 1.0}
+
+    def admit(shard):
+        return route_sticky(Request(0, [1], 4, shard=shard),
+                            groups, state)[0]
+
+    dests = [admit(2),   # pinned cold: stays on 2 (and must stamp it)
+             admit(0),   # hot spill: 2 was just assigned -> 3
+             admit(3),   # pinned cold: stays on 3
+             admit(1)]   # hot spill: 3 is now fresher -> back to 2
+    assert dests == [2, 3, 3, 2], dests
+    # alternating hot shards keep rotating, never twice in a row onto
+    # the same cold group
+    follow = [admit(0), admit(1), admit(0), admit(1)]
+    assert follow == [3, 2, 3, 2], follow
+
+
+def test_sticky_stay_without_planner_still_stamps_lru():
+    """The no-planner / zero-threshold stay path stamps too, so pinned
+    and unsharded admissions share one honest recency clock."""
+    from repro.fleet.scheduler import route_sticky
+
+    groups = [_FakeRoutee(False, 0) for _ in range(3)]
+    state = {}
+    assert route_sticky(Request(0, [1], 4, shard=0), groups, state)[0] == 0
+    # the unsharded fallback (least-loaded) must see group 0 as recently
+    # assigned and rotate away from it on the all-tied load
+    assert route_sticky(Request(1, [1], 4), groups, state)[0] == 1

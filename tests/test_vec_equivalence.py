@@ -17,10 +17,11 @@ import pytest
 
 from repro.configs import get_config
 from repro.configs.base import (AmoebaConfig, ClusterConfig, FleetConfig,
-                                MigrationConfig)
+                                LeaseConfig, MigrationConfig)
 from repro.fleet.scheduler import FleetEngine
 from repro.fleet.traffic import (TenantProfile, imbalanced_trace,
-                                 make_trace, skewed_longtail_trace)
+                                 make_trace, skewed_longtail_trace,
+                                 transient_burst_trace)
 from repro.fleet.vec import TrackedQueue
 from repro.models import transformer as T
 from repro.serve.engine import Request
@@ -112,6 +113,13 @@ CASES = {
     "quarantine": FleetConfig(
         num_groups=2, capacity=4, window=64, mode="dynamic",
         router="length_aware", quarantine_group=0, amoeba=AMOEBA),
+    # slack leases move admission capacity between parts; grants, early
+    # revokes and reconfig force-revokes all live in shared control-plane
+    # code, so summaries (incl. the lease block) stay bit-identical
+    "lease_sticky": FleetConfig(
+        num_groups=2, capacity=4, window=64, mode="dynamic",
+        router="sticky", migrate=MigrationConfig(enabled=True),
+        lease=LeaseConfig(enabled=True), amoeba=AMOEBA),
 }
 
 
@@ -123,6 +131,11 @@ def test_summary_identical(setup, case):
         def trace():
             return imbalanced_trace(40, cfg.vocab_size, seed=5,
                                     shards=fc.num_groups)
+    elif case == "lease_sticky":
+        def trace():
+            return transient_burst_trace(48, cfg.vocab_size, seed=5,
+                                         shards=fc.num_groups,
+                                         burst_len=16)
     else:
         def trace():
             return make_trace(PROFILES, horizon=30,
